@@ -1,0 +1,66 @@
+"""§Roofline table: reads the dry-run JSON cells and prints the three-term
+roofline per (arch × shape) on the single-pod mesh, plus the multi-pod
+collective deltas. Run the dry-run first:
+    python -m repro.launch.dryrun --all [--multi-pod]
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import time
+from typing import Dict, List, Tuple
+
+RESULTS = os.path.join("results", "dryrun")
+
+
+def load_cells() -> List[Dict]:
+    cells = []
+    for p in sorted(glob.glob(os.path.join(RESULTS, "*.json"))):
+        with open(p) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def run(verbose: bool = True) -> Tuple[float, Dict[str, float]]:
+    t0 = time.time()
+    cells = load_cells()
+    ok = [c for c in cells if c.get("status") == "ok"]
+    skip = [c for c in cells if c.get("status") == "skip"]
+    fail = [c for c in cells if c.get("status") == "fail"]
+    single = [c for c in ok if c.get("mesh") == "16x16"]
+    if verbose:
+        print(f"  roofline cells: {len(ok)} ok, {len(skip)} skip, "
+              f"{len(fail)} FAIL")
+        hdr = (f"  {'arch':22s} {'shape':12s} {'comp_ms':>8s} {'mem_ms':>8s} "
+               f"{'coll_ms':>8s} {'dom':>6s} {'HBM/dev':>8s} {'useful':>7s} "
+               f"{'R-frac':>7s}")
+        print(hdr)
+        for c in sorted(single, key=lambda c: (c["arch"], c["shape"])):
+            print(f"  {c['arch']:22s} {c['shape']:12s} "
+                  f"{c['compute_s']*1e3:8.2f} {c['memory_s']*1e3:8.2f} "
+                  f"{c['collective_s']*1e3:8.2f} {c['dominant'][:6]:>6s} "
+                  f"{c['per_device_hbm_bytes']/2**30:7.2f}G "
+                  f"{c['useful_ratio']:7.2f} {c.get('roofline_frac', 0):7.2f}")
+    out: Dict[str, float] = {
+        "cells_ok": len(ok), "cells_skip": len(skip), "cells_fail": len(fail),
+    }
+    if single:
+        out["mean_roofline_frac_train"] = (
+            sum(c.get("roofline_frac", 0) for c in single
+                if c["shape"] == "train_4k")
+            / max(1, sum(1 for c in single if c["shape"] == "train_4k")))
+        worst = min((c for c in single if c.get("roofline_frac")),
+                    key=lambda c: c["roofline_frac"], default=None)
+        if worst:
+            out["worst_cell_frac"] = worst["roofline_frac"]
+            if verbose:
+                print(f"  worst roofline fraction: {worst['arch']} × "
+                      f"{worst['shape']} = {worst['roofline_frac']:.3f}")
+    assert not fail, f"dry-run failures present: " \
+                     f"{[(c['arch'], c['shape'], c['mesh']) for c in fail]}"
+    return time.time() - t0, out
+
+
+if __name__ == "__main__":
+    print(run())

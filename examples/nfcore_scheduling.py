@@ -1,0 +1,46 @@
+"""Fig. 2 demo: workflow-aware vs workflow-blind scheduling on nf-core
+workflow shapes (discrete-event simulation of a heterogeneous cluster).
+
+    PYTHONPATH=src python examples/nfcore_scheduling.py [workflow]
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.cluster import (
+    NF_CORE_WORKFLOWS,
+    build_workflow,
+    heterogeneous_cluster,
+    run_workflow,
+    workflow_summary,
+)
+from repro.cluster.simulator import SimConfig
+
+
+def main() -> None:
+    wfs = sys.argv[1:] or list(NF_CORE_WORKFLOWS)
+    print(f"{'workflow':12s} {'tasks':>6s} {'par':>5s} "
+          f"{'original':>10s} {'rank_min_rr':>12s} {'gain':>7s}")
+    gains = []
+    for wf in wfs:
+        dag = build_workflow(wf, seed=1)
+        info = workflow_summary(dag)
+        base, _ = run_workflow(build_workflow(wf, seed=1),
+                               heterogeneous_cluster(6), "original",
+                               SimConfig(seed=11))
+        rank, cws = run_workflow(build_workflow(wf, seed=1),
+                                 heterogeneous_cluster(6), "rank_min_rr",
+                                 SimConfig(seed=11))
+        g = (base - rank) / base * 100
+        gains.append(g)
+        print(f"{wf:12s} {info['tasks']:6d} {info['parallelism']:5.1f} "
+              f"{base:9.0f}s {rank:11.0f}s {g:+6.1f}%")
+    print(f"\nmean gain: {np.mean(gains):+.1f}%  "
+          f"(paper: avg 10.8%, best median 24.8%)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""End-to-end serving driver: continuous batching under CWS admission.
+
+    PYTHONPATH=src python examples/serve_workload.py
+
+A tiny dense LM serves a burst of requests through the ContinuousBatcher.
+Request admission order comes from the CWS (each request is a CWSI task, so
+serving inherits workflow-aware ordering + provenance); the engine decodes
+one token per active slot per step and refills slots as requests finish.
+"""
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import (
+    CommonWorkflowScheduler,
+    LotaruPredictor,
+    Resources,
+    TaskSpec,
+    WorkflowDAG,
+)
+from repro.models import build_model
+from repro.runtime.serve import ContinuousBatcher, Request
+
+
+def main() -> None:
+    cfg = get_config("qwen1.5-0.5b", smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+
+    batcher = ContinuousBatcher(model, params, batch_slots=4, max_len=96)
+
+    # requests arrive as CWSI tasks; the CWS (shortest-predicted-first via
+    # the runtime predictor) decides admission order
+    pred = LotaruPredictor()
+    for nt in (8, 16, 32):
+        pred.observe(f"gen{nt}", nt, nt * 0.05)
+    dag = WorkflowDAG("serve-burst", "serve-burst")
+    reqs = []
+    for i in range(12):
+        n_new = int(rng.choice([8, 16, 32]))
+        prompt = rng.integers(2, cfg.vocab, size=rng.integers(4, 12)).tolist()
+        req = Request(req_id=f"r{i:02d}", prompt=prompt, max_new_tokens=n_new)
+        reqs.append(req)
+        dag.add_task(TaskSpec(task_id=req.req_id, name=f"gen{n_new}",
+                              resources=Resources(cpus=0.1)))
+
+    # order by predicted decode time (SPT — the CWS rank_min analogue for
+    # serving): shortest jobs first minimises mean latency
+    order = sorted(reqs, key=lambda r: pred.predict(
+        f"gen{r.max_new_tokens}", r.max_new_tokens)[0])
+    t0 = time.time()
+    for r in order:
+        batcher.submit(r)
+    batcher.drain()
+    dt = time.time() - t0
+
+    done = [r for r in reqs if r.done]
+    toks = sum(len(r.tokens_out) for r in done)
+    print(f"served {len(done)}/{len(reqs)} requests, {toks} tokens "
+          f"in {dt:.1f}s ({toks/dt:.1f} tok/s, {batcher.steps} engine steps)")
+    for r in done[:3]:
+        print(f"  {r.req_id}: prompt[:4]={r.prompt[:4]} -> "
+              f"out[:6]={r.tokens_out[:6]}")
+    assert len(done) == len(reqs)
+    assert all(len(r.tokens_out) >= 1 for r in done)
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+from .ckpt import (  # noqa: F401
+    AsyncCheckpointer,
+    latest_checkpoint,
+    prune_checkpoints,
+    restore_checkpoint,
+    save_checkpoint,
+)

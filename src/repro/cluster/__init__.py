@@ -1,0 +1,19 @@
+# Resource-manager substrate: node/slice profiles, the discrete-event
+# cluster simulator (paper-methodology evaluation), nf-core-shaped traces,
+# and a real thread-pool executor driven by the same CWS engine.
+from .executor import LocalExecutor  # noqa: F401
+from .nodes import (  # noqa: F401
+    GiB,
+    TPU_V5E,
+    cpu_node,
+    heterogeneous_cluster,
+    tpu_fleet,
+    tpu_slice,
+)
+from .simulator import ClusterSimulator, SimConfig, run_workflow  # noqa: F401
+from .traces import (  # noqa: F401
+    NF_CORE_TEMPLATES,
+    NF_CORE_WORKFLOWS,
+    build_workflow,
+    workflow_summary,
+)

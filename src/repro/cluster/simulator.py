@@ -1,0 +1,232 @@
+"""Discrete-event cluster simulator — the resource-manager side of the CWS.
+
+Reproduces the paper's evaluation methodology without a physical cluster:
+the CWS engine makes *exactly the same calls* it would against Kubernetes;
+the simulator supplies node events, executes launches by sampling task
+runtimes, and reports completions. Ground truth per task comes from the
+trace generator (``base_runtime_s``, true peak memory in
+``spec.params['sim']``), while the scheduler only sees requests + history —
+so prediction plugins are evaluated honestly.
+
+Faults modelled (all seeded & deterministic):
+  * node crashes (running tasks requeued by the CWS) and elastic re-joins,
+  * node-level slowdowns (contention → straggler mitigation kicks in),
+  * per-task straggler noise (heavy-tailed runtime multiplier),
+  * OOM kills when the granted allocation < true peak memory.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import math
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from ..core.dag import Task, TaskState, WorkflowDAG
+from ..core.scheduler import CommonWorkflowScheduler, NodeInfo, TaskResult
+
+
+@dataclass(order=True)
+class _Event:
+    time: float
+    seq: int
+    kind: str = field(compare=False)
+    payload: Dict[str, Any] = field(compare=False, default_factory=dict)
+
+
+@dataclass
+class SimConfig:
+    seed: int = 0
+    runtime_noise_sigma: float = 0.08      # lognormal sigma on every task
+    straggler_prob: float = 0.0            # per-task heavy-tail probability
+    straggler_factor: Tuple[float, float] = (2.0, 5.0)
+    staging_bandwidth: float = 1e9         # bytes/s for non-local inputs
+    staging_latency: float = 0.5           # container/pod start overhead (s)
+    oom_check: bool = True
+    speculation_period: float = 15.0       # how often to scan for stragglers
+
+
+class ClusterSimulator:
+    """Implements the ``ClusterAdapter`` protocol against virtual time."""
+
+    def __init__(self, nodes: List[NodeInfo], config: Optional[SimConfig] = None):
+        self.config = config or SimConfig()
+        self.rng = np.random.default_rng(self.config.seed)
+        self.now = 0.0
+        self._heap: List[_Event] = []
+        self._seq = itertools.count()
+        self._initial_nodes = list(nodes)
+        self.cws: Optional[CommonWorkflowScheduler] = None
+        # launch bookkeeping: task_id -> live launch generation
+        self._launch_gen: Dict[str, int] = {}
+        self._gen = itertools.count(1)
+        self._node_of_launch: Dict[int, str] = {}
+        self._task_of_launch: Dict[int, Task] = {}
+        self.launches = 0
+        self.kills = 0
+
+    # ------------------------------------------------------------------
+    def attach(self, cws: CommonWorkflowScheduler) -> None:
+        self.cws = cws
+        cws.staging_bandwidth = self.config.staging_bandwidth
+        for n in self._initial_nodes:
+            cws.add_node(n, now=self.now)
+        if cws.enable_speculation:
+            self._push(self.now + self.config.speculation_period, "SPEC_CHECK", {})
+
+    # ---- ClusterAdapter protocol ----
+    def launch(self, task: Task, node: str, mem_alloc: int) -> None:
+        assert self.cws is not None
+        gen = next(self._gen)
+        self._launch_gen[task.task_id] = gen
+        self._node_of_launch[gen] = node
+        self._task_of_launch[gen] = task
+        self.launches += 1
+
+        sim = task.spec.params.get("sim", {})
+        true_peak = int(sim.get("peak_mem", 0))
+        # ground-truth runtime: direct submissions carry base_runtime_s;
+        # tasks that crossed the CWSI wire carry it in params["sim"]
+        # (the wire format intentionally omits ground truth fields)
+        base_runtime = task.spec.base_runtime_s or float(sim.get("runtime", 0.0))
+        # staging: move non-resident inputs, plus constant startup latency
+        remote = sum(r.size_bytes for r in task.spec.inputs
+                     if r.location is not None and r.location != node)
+        stage = self.config.staging_latency + remote / self.config.staging_bandwidth
+        start = self.now + stage
+
+        speed = self.cws.nodes[node].info.speed_factor if node in self.cws.nodes else 1.0
+        noise = float(self.rng.lognormal(0.0, self.config.runtime_noise_sigma))
+        straggle = 1.0
+        if self.config.straggler_prob > 0 and self.rng.random() < self.config.straggler_prob:
+            lo, hi = self.config.straggler_factor
+            straggle = float(self.rng.uniform(lo, hi))
+        runtime = base_runtime / max(speed, 1e-6) * noise * straggle
+
+        if self.config.oom_check and true_peak > 0 and mem_alloc < true_peak:
+            # OOM-kill partway through (the task dies when it touches the
+            # allocation boundary — model at the matching fraction of runtime)
+            frac = max(0.05, min(1.0, mem_alloc / true_peak))
+            self._push(start, "TASK_START", {"gen": gen})
+            self._push(start + runtime * frac, "TASK_FINISH", {
+                "gen": gen,
+                "result": TaskResult(False, peak_mem_bytes=mem_alloc, oom=True,
+                                     reason="OOMKilled"),
+            })
+            return
+
+        cpu_eff = float(sim.get("cpu_utilisation", 0.8))
+        self._push(start, "TASK_START", {"gen": gen})
+        self._push(start + runtime, "TASK_FINISH", {
+            "gen": gen,
+            "result": TaskResult(
+                True,
+                peak_mem_bytes=true_peak or mem_alloc // 2,
+                cpu_seconds=runtime * task.spec.resources.cpus * cpu_eff,
+            ),
+        })
+
+    def kill(self, task_id: str) -> None:
+        self._launch_gen.pop(task_id, None)   # invalidate in-flight events
+        self.kills += 1
+
+    # ------------------------------------------------------------------
+    # fault & elasticity injection (schedule before run())
+    # ------------------------------------------------------------------
+    def fail_node_at(self, time: float, node: str) -> None:
+        self._push(time, "NODE_FAIL", {"node": node})
+
+    def join_node_at(self, time: float, info: NodeInfo) -> None:
+        self._push(time, "NODE_JOIN", {"info": info})
+
+    def slow_node_at(self, time: float, node: str, speed_factor: float) -> None:
+        self._push(time, "NODE_SLOW", {"node": node, "speed": speed_factor})
+
+    def submit_workflow_at(self, time: float, dag: WorkflowDAG) -> None:
+        self._push(time, "WF_SUBMIT", {"dag": dag})
+
+    # ------------------------------------------------------------------
+    def _push(self, time: float, kind: str, payload: Dict[str, Any]) -> None:
+        heapq.heappush(self._heap, _Event(time, next(self._seq), kind, payload))
+
+    def _live(self, gen: int) -> Optional[Task]:
+        task = self._task_of_launch.get(gen)
+        if task is None:
+            return None
+        if self._launch_gen.get(task.task_id) != gen:
+            return None   # superseded (retried/killed) launch
+        return task
+
+    def run(self, until: float = math.inf, max_events: int = 10_000_000) -> float:
+        """Drain the event loop; returns the final virtual time."""
+        assert self.cws is not None, "attach() a scheduler first"
+        cws = self.cws
+        n = 0
+        while self._heap and self._heap[0].time <= until:
+            n += 1
+            if n > max_events:
+                raise RuntimeError("simulator event budget exceeded (livelock?)")
+            ev = heapq.heappop(self._heap)
+            self.now = ev.time
+
+            if ev.kind == "TASK_START":
+                task = self._live(ev.payload["gen"])
+                if task is not None:
+                    cws.on_task_started(task.task_id, self.now)
+
+            elif ev.kind == "TASK_FINISH":
+                gen = ev.payload["gen"]
+                task = self._live(gen)
+                if task is not None:
+                    self._launch_gen.pop(task.task_id, None)
+                    cws.on_task_finished(task.task_id, self.now, ev.payload["result"])
+
+            elif ev.kind == "NODE_FAIL":
+                node = ev.payload["node"]
+                # drop in-flight events of tasks on that node
+                for gen, nname in list(self._node_of_launch.items()):
+                    task = self._task_of_launch.get(gen)
+                    if nname == node and task is not None \
+                            and self._launch_gen.get(task.task_id) == gen:
+                        self._launch_gen.pop(task.task_id, None)
+                cws.remove_node(node, self.now)
+
+            elif ev.kind == "NODE_JOIN":
+                cws.add_node(ev.payload["info"], self.now)
+
+            elif ev.kind == "NODE_SLOW":
+                cws.set_node_speed(ev.payload["node"], ev.payload["speed"], self.now)
+
+            elif ev.kind == "WF_SUBMIT":
+                cws.submit_workflow(ev.payload["dag"], self.now)
+
+            elif ev.kind == "SPEC_CHECK":
+                cws.check_speculation(self.now)
+                cws.schedule(self.now)
+                if any(not d.finished() for d in cws.dags.values()):
+                    self._push(self.now + self.config.speculation_period,
+                               "SPEC_CHECK", {})
+        return self.now
+
+
+def run_workflow(
+    dag: WorkflowDAG,
+    nodes: List[NodeInfo],
+    strategy: str = "rank_min_rr",
+    sim_config: Optional[SimConfig] = None,
+    **cws_kwargs: Any,
+) -> Tuple[float, CommonWorkflowScheduler]:
+    """Convenience: simulate one workflow to completion, return (makespan, cws)."""
+    sim = ClusterSimulator(nodes, sim_config)
+    cws = CommonWorkflowScheduler(adapter=sim, strategy=strategy, **cws_kwargs)
+    sim.attach(cws)
+    sim.submit_workflow_at(0.0, dag)
+    sim.run()
+    if not dag.finished():
+        raise RuntimeError(
+            f"workflow {dag.workflow_id} did not finish "
+            f"({sum(t.state.terminal for t in dag.tasks.values())}/{len(dag)})"
+        )
+    return cws.provenance.makespan(dag.workflow_id), cws

@@ -1,0 +1,34 @@
+# The paper's primary contribution: the Common Workflow Scheduler (CWS)
+# and its interface (CWSI) — workflow-aware scheduling inside the resource
+# manager, with prediction plugins and central provenance.
+from .dag import (  # noqa: F401
+    DataRef,
+    Resources,
+    Task,
+    TaskSpec,
+    TaskState,
+    WorkflowDAG,
+    fresh_task_id,
+)
+from .cwsi import CWSI_VERSION, CWSIClient, CWSIError, CWSIServer  # noqa: F401
+from .predict import (  # noqa: F401
+    FeedbackMemoryPredictor,
+    LotaruPredictor,
+    NodeProfile,
+    RooflinePrior,
+    RooflineTerms,
+)
+from .provenance import NodeEvent, ProvenanceStore, TaskTrace  # noqa: F401
+from .scheduler import (  # noqa: F401
+    ClusterAdapter,
+    CommonWorkflowScheduler,
+    NodeInfo,
+    TaskResult,
+)
+from .strategies import (  # noqa: F401
+    STRATEGIES,
+    NodeView,
+    SchedulingContext,
+    Strategy,
+    make_strategy,
+)

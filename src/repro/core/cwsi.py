@@ -1,0 +1,214 @@
+"""The Common Workflow Scheduler Interface (CWSI), v1.
+
+The CWSI is the paper's central artifact: the *only* channel between a
+workflow engine (SWMS) and the workflow-aware scheduler living inside the
+resource manager. A resource manager implements the CWS once; any SWMS that
+speaks CWSI gets workflow-aware scheduling on every such resource manager.
+
+This module defines the interface as a **versioned, JSON-serialisable message
+protocol** plus a server (wrapping a ``CommonWorkflowScheduler``) and a client
+(used by the SWMS adapters: the simulator driver, the orchestrator, the
+serving frontend). Every call crosses a ``dumps``/``loads`` boundary, so the
+separation is honest — the transport could be swapped for HTTP without
+touching either side. The verb surface follows Lehmann et al. (CCGrid'23):
+
+  POST /{version}/workflow/{wid}                       register workflow
+  POST /{version}/workflow/{wid}/task                  submit task (+deps)
+  GET  /{version}/workflow/{wid}/task/{tid}/state      task state
+  GET  /{version}/workflow/{wid}/state                 all task states
+  PUT  /{version}/workflow/{wid}/strategy              choose strategy
+  GET  /{version}/provenance/task/{name}               task traces
+  GET  /{version}/provenance/workflow/{wid}            workflow traces
+  GET  /{version}/predict/runtime                      predicted runtime
+  GET  /{version}/metrics/nodes                        node utilisation
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Tuple
+
+from .dag import TaskSpec, TaskState
+from .scheduler import CommonWorkflowScheduler
+from .strategies import make_strategy
+
+CWSI_VERSION = "v1"
+
+
+class CWSIError(RuntimeError):
+    def __init__(self, code: int, message: str) -> None:
+        super().__init__(f"CWSI {code}: {message}")
+        self.code = code
+
+
+@dataclass
+class _Request:
+    method: str
+    path: str
+    body: Optional[Dict[str, Any]] = None
+
+    def encode(self) -> str:
+        return json.dumps(
+            {"method": self.method, "path": self.path, "body": self.body}
+        )
+
+    @staticmethod
+    def decode(raw: str) -> "_Request":
+        d = json.loads(raw)
+        return _Request(d["method"], d["path"], d.get("body"))
+
+
+class CWSIServer:
+    """Resource-manager side: routes CWSI messages into the CWS engine."""
+
+    def __init__(self, scheduler: CommonWorkflowScheduler) -> None:
+        self.scheduler = scheduler
+        self.clock: float = 0.0   # advanced by the resource manager
+
+    # transport entrypoint -------------------------------------------------
+    def handle(self, raw_request: str) -> str:
+        req = _Request.decode(raw_request)
+        try:
+            status, body = self._route(req)
+        except CWSIError as e:
+            status, body = e.code, {"error": str(e)}
+        except KeyError as e:
+            status, body = 404, {"error": f"not found: {e}"}
+        except ValueError as e:
+            status, body = 400, {"error": str(e)}
+        return json.dumps({"status": status, "body": body})
+
+    # routing ---------------------------------------------------------------
+    def _route(self, req: _Request) -> Tuple[int, Dict[str, Any]]:
+        parts = [p for p in req.path.split("/") if p]
+        if not parts or parts[0] != CWSI_VERSION:
+            raise CWSIError(400, f"unsupported CWSI version in path {req.path!r}")
+        parts = parts[1:]
+        m = (req.method.upper(), tuple(parts))
+
+        if req.method == "POST" and parts[:1] == ["workflow"] and len(parts) == 2:
+            wid = parts[1]
+            meta = req.body or {}
+            self.scheduler.register_workflow(wid, meta.get("name", wid), meta)
+            return 200, {"workflowId": wid}
+
+        if (req.method == "POST" and len(parts) == 3
+                and parts[0] == "workflow" and parts[2] == "task"):
+            wid = parts[1]
+            body = req.body or {}
+            spec = TaskSpec.from_json(body["task"])
+            spec.workflow_id = wid
+            deps = tuple(body.get("dependsOn", []))
+            task = self.scheduler.submit_task(spec, deps, now=self.clock)
+            self.scheduler.schedule(self.clock)
+            return 200, {"taskId": task.task_id, "state": task.state.value}
+
+        if (req.method == "GET" and len(parts) == 5
+                and parts[0] == "workflow" and parts[2] == "task"
+                and parts[4] == "state"):
+            st = self.scheduler.task_state(parts[1], parts[3])
+            return 200, {"state": st.value}
+
+        if (req.method == "GET" and len(parts) == 3
+                and parts[0] == "workflow" and parts[2] == "state"):
+            dag = self.scheduler.dags[parts[1]]
+            return 200, {
+                "finished": dag.finished(),
+                "succeeded": dag.succeeded(),
+                "tasks": {tid: t.state.value for tid, t in dag.tasks.items()},
+            }
+
+        if (req.method == "PUT" and len(parts) == 3
+                and parts[0] == "workflow" and parts[2] == "strategy"):
+            name = (req.body or {}).get("strategy", "")
+            self.scheduler.strategy = make_strategy(name)
+            return 200, {"strategy": name}
+
+        if req.method == "GET" and parts[:2] == ["provenance", "task"]:
+            traces = self.scheduler.provenance.traces_for_name(parts[2])
+            return 200, {"traces": [
+                {
+                    "taskId": t.task_id, "node": t.node, "runtime": t.runtime_s,
+                    "inputSize": t.input_size, "peakMem": t.peak_mem_bytes,
+                    "state": t.state,
+                } for t in traces
+            ]}
+
+        if req.method == "GET" and parts[:2] == ["provenance", "workflow"]:
+            wid = parts[2]
+            return 200, {
+                "makespan": self.scheduler.provenance.makespan(wid),
+                "queueTime": self.scheduler.provenance.total_queue_time(wid),
+                "traces": len(self.scheduler.provenance.traces_for_workflow(wid)),
+            }
+
+        if req.method == "GET" and parts == ["predict", "runtime"]:
+            body = req.body or {}
+            if self.scheduler.predictor is None:
+                raise CWSIError(501, "no runtime predictor installed")
+            mu, std = self.scheduler.predictor.predict(
+                body["name"], int(body.get("inputSize", 0)), body.get("node")
+            )
+            return 200, {"runtimeSeconds": mu, "stdSeconds": std}
+
+        if req.method == "GET" and parts == ["metrics", "nodes"]:
+            return 200, {"utilisation": self.scheduler.provenance.node_utilisation()}
+
+        raise CWSIError(404, f"no route for {req.method} {req.path}")
+
+
+class CWSIClient:
+    """SWMS side: thin wrapper producing CWSI messages.
+
+    ``transport`` is any ``str -> str`` callable; by default it is
+    ``server.handle`` (in-process), but it serialises every payload so it can
+    be pointed at a socket verbatim.
+    """
+
+    def __init__(self, server: CWSIServer) -> None:
+        self._transport = server.handle
+
+    def _call(self, method: str, path: str,
+              body: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+        raw = _Request(method, f"/{CWSI_VERSION}{path}", body).encode()
+        resp = json.loads(self._transport(raw))
+        if resp["status"] != 200:
+            raise CWSIError(resp["status"], str(resp["body"]))
+        return resp["body"]
+
+    # ---- the SWMS-facing API ----
+    def register_workflow(self, workflow_id: str, name: str = "",
+                          meta: Optional[Dict[str, Any]] = None) -> None:
+        self._call("POST", f"/workflow/{workflow_id}",
+                   {"name": name or workflow_id, **(meta or {})})
+
+    def submit_task(self, workflow_id: str, spec: TaskSpec,
+                    depends_on: Tuple[str, ...] = ()) -> str:
+        body = {"task": spec.to_json(), "dependsOn": list(depends_on)}
+        return self._call("POST", f"/workflow/{workflow_id}/task", body)["taskId"]
+
+    def task_state(self, workflow_id: str, task_id: str) -> TaskState:
+        b = self._call("GET", f"/workflow/{workflow_id}/task/{task_id}/state")
+        return TaskState(b["state"])
+
+    def workflow_state(self, workflow_id: str) -> Dict[str, Any]:
+        return self._call("GET", f"/workflow/{workflow_id}/state")
+
+    def set_strategy(self, workflow_id: str, strategy: str) -> None:
+        self._call("PUT", f"/workflow/{workflow_id}/strategy",
+                   {"strategy": strategy})
+
+    def task_provenance(self, task_name: str) -> List[Dict[str, Any]]:
+        return self._call("GET", f"/provenance/task/{task_name}")["traces"]
+
+    def workflow_provenance(self, workflow_id: str) -> Dict[str, Any]:
+        return self._call("GET", f"/provenance/workflow/{workflow_id}")
+
+    def predict_runtime(self, name: str, input_size: int = 0,
+                        node: Optional[str] = None) -> Tuple[float, float]:
+        b = self._call("GET", "/predict/runtime",
+                       {"name": name, "inputSize": input_size, "node": node})
+        return b["runtimeSeconds"], b["stdSeconds"]
+
+    def node_utilisation(self) -> Dict[str, float]:
+        return self._call("GET", "/metrics/nodes")["utilisation"]

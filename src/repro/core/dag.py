@@ -1,0 +1,342 @@
+"""Workflow DAG model for the Common Workflow Scheduler.
+
+This is the data model the CWSI transports: tasks with explicit
+dependencies, data inputs (with sizes, for locality/prediction), and
+resource requests. It intentionally mirrors the fields of the CWSI v1
+message format from Lehmann et al. (CCGrid'23 / SC-W'23), extended with
+TPU-native resource requests (chips, HBM bytes, gang size) per DESIGN.md §2.
+"""
+from __future__ import annotations
+
+import itertools
+import json
+from collections import defaultdict, deque
+from dataclasses import dataclass, field
+from enum import Enum
+from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+
+class TaskState(str, Enum):
+    """Lifecycle of a task as seen through the CWSI."""
+
+    PENDING = "PENDING"          # submitted, dependencies not met
+    READY = "READY"              # dependencies met, waiting for resources
+    SCHEDULED = "SCHEDULED"      # assigned to a node/slice, not yet running
+    RUNNING = "RUNNING"
+    SUCCEEDED = "SUCCEEDED"
+    FAILED = "FAILED"            # attempt failed; may be retried
+    KILLED = "KILLED"            # preempted / speculative loser
+    ERROR = "ERROR"              # permanently failed (retries exhausted)
+
+    @property
+    def terminal(self) -> bool:
+        return self in (TaskState.SUCCEEDED, TaskState.ERROR)
+
+    @property
+    def active(self) -> bool:
+        return self in (TaskState.SCHEDULED, TaskState.RUNNING)
+
+
+@dataclass(frozen=True)
+class DataRef:
+    """A named input/output with a size — the unit of data-aware scheduling."""
+
+    name: str
+    size_bytes: int = 0
+    location: Optional[str] = None  # node/slice id currently holding it
+
+    def to_json(self) -> Dict[str, Any]:
+        return {"name": self.name, "sizeBytes": self.size_bytes, "location": self.location}
+
+    @staticmethod
+    def from_json(d: Dict[str, Any]) -> "DataRef":
+        return DataRef(d["name"], int(d.get("sizeBytes", 0)), d.get("location"))
+
+
+@dataclass(frozen=True)
+class Resources:
+    """Resource request. CPU-cluster fields + TPU-native extensions."""
+
+    cpus: float = 1.0
+    mem_bytes: int = 1 << 30
+    # --- TPU extensions (DESIGN.md §2): gang-scheduled slices ---
+    chips: int = 0                  # 0 = plain CPU task
+    hbm_bytes_per_chip: int = 0     # from compiled memory_analysis()
+    accelerator: str = ""           # e.g. "tpu-v5e"
+    gang: bool = False              # all-or-nothing co-scheduling
+
+    def to_json(self) -> Dict[str, Any]:
+        return {
+            "cpus": self.cpus,
+            "memoryInBytes": self.mem_bytes,
+            "chips": self.chips,
+            "hbmBytesPerChip": self.hbm_bytes_per_chip,
+            "accelerator": self.accelerator,
+            "gang": self.gang,
+        }
+
+    @staticmethod
+    def from_json(d: Dict[str, Any]) -> "Resources":
+        return Resources(
+            cpus=float(d.get("cpus", 1.0)),
+            mem_bytes=int(d.get("memoryInBytes", 1 << 30)),
+            chips=int(d.get("chips", 0)),
+            hbm_bytes_per_chip=int(d.get("hbmBytesPerChip", 0)),
+            accelerator=d.get("accelerator", ""),
+            gang=bool(d.get("gang", False)),
+        )
+
+
+@dataclass
+class TaskSpec:
+    """Immutable description of one task invocation (CWSI submit payload)."""
+
+    task_id: str
+    name: str                       # abstract task / process name (e.g. "fastqc")
+    workflow_id: str = ""
+    inputs: Tuple[DataRef, ...] = ()
+    outputs: Tuple[DataRef, ...] = ()
+    resources: Resources = field(default_factory=Resources)
+    params: Dict[str, Any] = field(default_factory=dict)   # task-specific tool params
+    # Runtime payload for the *real* executor: a callable. The simulator
+    # ignores it; the wire format carries only its symbolic name.
+    fn: Optional[Callable[..., Any]] = None
+    base_runtime_s: float = 0.0     # ground-truth runtime at speed 1.0 (simulator only)
+    max_retries: int = 3
+
+    @property
+    def input_size(self) -> int:
+        return sum(r.size_bytes for r in self.inputs)
+
+    def to_json(self) -> Dict[str, Any]:
+        return {
+            "id": self.task_id,
+            "name": self.name,
+            "workflowId": self.workflow_id,
+            "inputs": [r.to_json() for r in self.inputs],
+            "outputs": [r.to_json() for r in self.outputs],
+            "resources": self.resources.to_json(),
+            "params": self.params,
+            "maxRetries": self.max_retries,
+        }
+
+    @staticmethod
+    def from_json(d: Dict[str, Any]) -> "TaskSpec":
+        return TaskSpec(
+            task_id=d["id"],
+            name=d["name"],
+            workflow_id=d.get("workflowId", ""),
+            inputs=tuple(DataRef.from_json(x) for x in d.get("inputs", [])),
+            outputs=tuple(DataRef.from_json(x) for x in d.get("outputs", [])),
+            resources=Resources.from_json(d.get("resources", {})),
+            params=dict(d.get("params", {})),
+            max_retries=int(d.get("maxRetries", 3)),
+        )
+
+
+@dataclass
+class Task:
+    """Mutable runtime view of a task inside the CWS."""
+
+    spec: TaskSpec
+    state: TaskState = TaskState.PENDING
+    attempt: int = 0
+    node: Optional[str] = None          # assigned node / slice id
+    submit_time: float = 0.0
+    ready_time: float = 0.0             # when dependencies were satisfied
+    schedule_time: float = 0.0
+    start_time: float = 0.0
+    end_time: float = 0.0
+    speculative_of: Optional[str] = None  # original task id if this is a backup copy
+    failure_reason: str = ""
+
+    @property
+    def task_id(self) -> str:
+        return self.spec.task_id
+
+    @property
+    def name(self) -> str:
+        return self.spec.name
+
+    @property
+    def runtime_s(self) -> float:
+        return max(0.0, self.end_time - self.start_time)
+
+
+class CycleError(ValueError):
+    pass
+
+
+class WorkflowDAG:
+    """A workflow: tasks + dependency edges, with scheduling-relevant analytics.
+
+    The rank computations implement the priorities used by the CWS
+    strategies: ``rank`` is the length (in hops, or in predicted seconds if
+    weights are given) of the longest path from a task to any sink — the
+    unit-weight variant of HEFT's upward rank, which is what the paper's
+    "Rank" strategies use.
+    """
+
+    def __init__(self, workflow_id: str, name: str = "") -> None:
+        self.workflow_id = workflow_id
+        self.name = name or workflow_id
+        self.tasks: Dict[str, Task] = {}
+        self.children: Dict[str, Set[str]] = defaultdict(set)
+        self.parents: Dict[str, Set[str]] = defaultdict(set)
+        self._rank_cache: Optional[Dict[str, float]] = None
+
+    # ---------------- construction ----------------
+    def add_task(self, spec: TaskSpec, deps: Iterable[str] = ()) -> Task:
+        if spec.task_id in self.tasks:
+            raise ValueError(f"duplicate task id {spec.task_id!r}")
+        spec.workflow_id = self.workflow_id
+        task = Task(spec=spec)
+        self.tasks[spec.task_id] = task
+        for d in deps:
+            self.add_dep(d, spec.task_id)
+        self._rank_cache = None
+        return task
+
+    def add_dep(self, parent: str, child: str) -> None:
+        if parent not in self.tasks:
+            raise KeyError(f"unknown parent task {parent!r}")
+        if child not in self.tasks:
+            raise KeyError(f"unknown child task {child!r}")
+        if parent == child:
+            raise CycleError(f"self-dependency on {parent!r}")
+        self.children[parent].add(child)
+        self.parents[child].add(parent)
+        self._rank_cache = None
+
+    # ---------------- queries ----------------
+    def __len__(self) -> int:
+        return len(self.tasks)
+
+    def __contains__(self, task_id: str) -> bool:
+        return task_id in self.tasks
+
+    def task(self, task_id: str) -> Task:
+        return self.tasks[task_id]
+
+    def sources(self) -> List[str]:
+        return [t for t in self.tasks if not self.parents[t]]
+
+    def sinks(self) -> List[str]:
+        return [t for t in self.tasks if not self.children[t]]
+
+    def topological_order(self) -> List[str]:
+        indeg = {t: len(self.parents[t]) for t in self.tasks}
+        q = deque([t for t, d in indeg.items() if d == 0])
+        order: List[str] = []
+        while q:
+            t = q.popleft()
+            order.append(t)
+            for c in self.children[t]:
+                indeg[c] -= 1
+                if indeg[c] == 0:
+                    q.append(c)
+        if len(order) != len(self.tasks):
+            raise CycleError(f"workflow {self.workflow_id!r} contains a cycle")
+        return order
+
+    def validate(self) -> None:
+        self.topological_order()
+
+    def deps_satisfied(self, task_id: str) -> bool:
+        return all(
+            self.tasks[p].state == TaskState.SUCCEEDED for p in self.parents[task_id]
+        )
+
+    def ready_tasks(self, now: float = 0.0) -> List[Task]:
+        """PENDING tasks whose parents all SUCCEEDED → promote to READY.
+
+        ``now`` stamps ``ready_time`` — the FIFO key (a real SWMS submits a
+        task when it becomes runnable, so queue order is readiness order).
+        """
+        out = []
+        for tid, task in self.tasks.items():
+            if task.state == TaskState.PENDING and self.deps_satisfied(tid):
+                task.state = TaskState.READY
+                task.ready_time = now
+            if task.state == TaskState.READY:
+                out.append(task)
+        return out
+
+    def finished(self) -> bool:
+        return all(t.state.terminal for t in self.tasks.values())
+
+    def succeeded(self) -> bool:
+        return all(t.state == TaskState.SUCCEEDED for t in self.tasks.values())
+
+    # ---------------- analytics ----------------
+    def ranks(self, weights: Optional[Dict[str, float]] = None) -> Dict[str, float]:
+        """Upward rank: longest path (in hops or weighted seconds) to a sink.
+
+        ``weights`` maps task_id → cost; default 1.0 (unit-weight rank, as in
+        the paper's Rank strategies). Result is cached for the unit case.
+        """
+        if weights is None and self._rank_cache is not None:
+            return self._rank_cache
+        w = weights or {}
+        rank: Dict[str, float] = {}
+        for tid in reversed(self.topological_order()):
+            cost = w.get(tid, 1.0)
+            kids = self.children[tid]
+            rank[tid] = cost + (max(rank[c] for c in kids) if kids else 0.0)
+        if weights is None:
+            self._rank_cache = rank
+        return rank
+
+    def descendants(self, task_id: str) -> Set[str]:
+        seen: Set[str] = set()
+        stack = [task_id]
+        while stack:
+            for c in self.children[stack.pop()]:
+                if c not in seen:
+                    seen.add(c)
+                    stack.append(c)
+        return seen
+
+    def critical_path(self, weights: Optional[Dict[str, float]] = None) -> List[str]:
+        rank = self.ranks(weights)
+        w = weights or {}
+        cur = max(self.sources(), key=lambda t: rank[t])
+        path = [cur]
+        while self.children[cur]:
+            cur = max(self.children[cur], key=lambda c: rank[c])
+            path.append(cur)
+        return path
+
+    def makespan(self) -> float:
+        done = [t for t in self.tasks.values() if t.state == TaskState.SUCCEEDED]
+        if not done:
+            return 0.0
+        return max(t.end_time for t in done) - min(t.submit_time for t in self.tasks.values())
+
+    def to_json(self) -> Dict[str, Any]:
+        return {
+            "workflowId": self.workflow_id,
+            "name": self.name,
+            "tasks": [t.spec.to_json() for t in self.tasks.values()],
+            "edges": [
+                {"from": p, "to": c}
+                for p, cs in self.children.items()
+                for c in sorted(cs)
+            ],
+        }
+
+    @staticmethod
+    def from_json(d: Dict[str, Any]) -> "WorkflowDAG":
+        dag = WorkflowDAG(d["workflowId"], d.get("name", ""))
+        for ts in d.get("tasks", []):
+            dag.add_task(TaskSpec.from_json(ts))
+        for e in d.get("edges", []):
+            dag.add_dep(e["from"], e["to"])
+        return dag
+
+
+_task_counter = itertools.count()
+
+
+def fresh_task_id(prefix: str = "task") -> str:
+    return f"{prefix}-{next(_task_counter):06d}"

@@ -1,0 +1,497 @@
+"""The Common Workflow Scheduler (CWS) engine.
+
+The CWS runs *inside* the resource manager (paper Fig. 1): the resource
+manager delivers node/infrastructure events and executes launch/kill commands
+through a small ``ClusterAdapter`` protocol; workflow engines talk to the CWS
+exclusively through the CWSI (``cwsi.py``). The engine owns:
+
+  * task state machines + retries (with memory-doubling on OOM, §5),
+  * resource accounting (cpus / memory / TPU chips; gang = all-or-nothing),
+  * the pluggable ``Strategy`` (ordering + placement),
+  * online feeding of the prediction plugins and the provenance store,
+  * straggler mitigation by speculative execution (first finisher wins),
+  * elastic node join/leave (running work on a lost node is requeued).
+
+In the TPU adaptation a "node" is a *slice* (e.g. one pod = 256 chips), so a
+gang-scheduled step-program always fits a single NodeView; cross-slice gangs
+are expressed as multiple cooperating tasks.
+"""
+from __future__ import annotations
+
+import logging
+from dataclasses import dataclass, field, replace
+from typing import Any, Callable, Dict, List, Optional, Protocol, Tuple
+
+from .dag import DataRef, Task, TaskSpec, TaskState, WorkflowDAG, fresh_task_id
+from .predict import FeedbackMemoryPredictor, LotaruPredictor, NodeProfile
+from .provenance import NodeEvent, ProvenanceStore, TaskTrace
+from .strategies import (
+    NodeView,
+    SchedulingContext,
+    Strategy,
+    make_strategy,
+)
+
+log = logging.getLogger("repro.cws")
+
+
+@dataclass
+class NodeInfo:
+    """Static description of a node/slice as registered by the resource manager."""
+
+    name: str
+    cpus: float = 8.0
+    mem_bytes: int = 32 << 30
+    chips: int = 0
+    hbm_bytes_per_chip: int = 16 << 30
+    speed_factor: float = 1.0
+    labels: Dict[str, str] = field(default_factory=dict)
+
+
+@dataclass
+class TaskResult:
+    """Completion report delivered by the resource manager."""
+
+    success: bool
+    peak_mem_bytes: int = 0
+    cpu_seconds: float = 0.0
+    oom: bool = False
+    reason: str = ""
+    output: Any = None
+
+
+class ClusterAdapter(Protocol):
+    """What the resource manager must implement for the CWS."""
+
+    def launch(self, task: Task, node: str, mem_alloc: int) -> None: ...
+
+    def kill(self, task_id: str) -> None: ...
+
+
+@dataclass
+class _NodeState:
+    info: NodeInfo
+    cpus_free: float
+    mem_free: int
+    chips_free: int
+    up: bool = True
+    est_available_at: float = 0.0
+
+    def view(self) -> NodeView:
+        return NodeView(
+            name=self.info.name,
+            cpus_total=self.info.cpus,
+            mem_total=self.info.mem_bytes,
+            cpus_free=self.cpus_free,
+            mem_free=self.mem_free,
+            chips_total=self.info.chips,
+            chips_free=self.chips_free,
+            speed_factor=self.info.speed_factor,
+            labels=dict(self.info.labels),
+            est_available_at=self.est_available_at,
+        )
+
+
+@dataclass
+class _Allocation:
+    node: str
+    cpus: float
+    mem: int
+    chips: int
+
+
+class CommonWorkflowScheduler:
+    """Workflow-aware scheduler engine behind the CWSI."""
+
+    def __init__(
+        self,
+        adapter: ClusterAdapter,
+        strategy: str | Strategy = "rank_min_rr",
+        provenance: Optional[ProvenanceStore] = None,
+        predictor: Optional[LotaruPredictor] = None,
+        mem_predictor: Optional[FeedbackMemoryPredictor] = None,
+        enable_speculation: bool = False,
+        speculation_factor: float = 1.8,
+        speculation_min_runtime: float = 30.0,
+        staging_bandwidth: float = 1e9,
+        use_predicted_memory: bool = False,
+    ) -> None:
+        self.adapter = adapter
+        self.strategy: Strategy = (
+            make_strategy(strategy) if isinstance(strategy, str) else strategy
+        )
+        self.provenance = provenance if provenance is not None else ProvenanceStore()
+        self.predictor = predictor
+        self.mem_predictor = mem_predictor
+        self.enable_speculation = enable_speculation
+        self.speculation_factor = speculation_factor
+        self.speculation_min_runtime = speculation_min_runtime
+        self.staging_bandwidth = staging_bandwidth
+        self.use_predicted_memory = use_predicted_memory
+
+        self.nodes: Dict[str, _NodeState] = {}
+        self.dags: Dict[str, WorkflowDAG] = {}
+        self.allocations: Dict[str, _Allocation] = {}
+        self.mem_allocated: Dict[str, int] = {}          # task_id -> bytes granted
+        # speculative copies: copy_id -> (copy Task, original id); and reverse
+        self.spec_copies: Dict[str, Task] = {}
+        self.spec_of_original: Dict[str, str] = {}
+        self.on_workflow_done: Optional[Callable[[str], None]] = None
+        self._queue_dirty = True
+
+    # ------------------------------------------------------------------
+    # resource-manager side: infrastructure events
+    # ------------------------------------------------------------------
+    def add_node(self, info: NodeInfo, now: float = 0.0) -> None:
+        self.nodes[info.name] = _NodeState(
+            info=info,
+            cpus_free=info.cpus,
+            mem_free=info.mem_bytes,
+            chips_free=info.chips,
+        )
+        self.provenance.record_node_event(NodeEvent(info.name, now, "UP"))
+        if self.predictor is not None:
+            self.predictor.register_node_bench(
+                NodeProfile(info.name, info.speed_factor)
+            )
+        self.schedule(now)
+
+    def remove_node(self, name: str, now: float = 0.0) -> None:
+        """Node failure / scale-in: requeue everything running there."""
+        st = self.nodes.get(name)
+        if st is None:
+            return
+        st.up = False
+        self.provenance.record_node_event(NodeEvent(name, now, "DOWN"))
+        victims = [tid for tid, a in self.allocations.items() if a.node == name]
+        for tid in victims:
+            task = self._find_task(tid)
+            if task is not None:
+                self._handle_failure(
+                    task, now, TaskResult(False, reason=f"node {name} lost"),
+                    requeue_free=True,
+                )
+        del self.nodes[name]
+        self.schedule(now)
+
+    def set_node_speed(self, name: str, speed_factor: float, now: float = 0.0) -> None:
+        if name in self.nodes:
+            self.nodes[name].info.speed_factor = speed_factor
+            self.provenance.record_node_event(
+                NodeEvent(name, now, "SLOW" if speed_factor < 1.0 else "RECOVERED",
+                          {"speed": speed_factor})
+            )
+            if self.predictor is not None:
+                self.predictor.register_node_bench(NodeProfile(name, speed_factor))
+
+    # ------------------------------------------------------------------
+    # SWMS side (invoked by the CWSI server)
+    # ------------------------------------------------------------------
+    def register_workflow(self, workflow_id: str, name: str = "",
+                          meta: Optional[Dict[str, Any]] = None) -> WorkflowDAG:
+        if workflow_id in self.dags:
+            return self.dags[workflow_id]
+        dag = WorkflowDAG(workflow_id, name)
+        self.dags[workflow_id] = dag
+        self.provenance.register_workflow(
+            workflow_id, {"name": name, **(meta or {})}
+        )
+        return dag
+
+    def submit_task(self, spec: TaskSpec, deps: Tuple[str, ...] = (),
+                    now: float = 0.0) -> Task:
+        dag = self.dags.get(spec.workflow_id)
+        if dag is None:
+            dag = self.register_workflow(spec.workflow_id)
+        task = dag.add_task(spec, deps)
+        task.submit_time = now
+        self._queue_dirty = True
+        return task
+
+    def submit_workflow(self, dag: WorkflowDAG, now: float = 0.0) -> None:
+        dag.validate()
+        self.dags[dag.workflow_id] = dag
+        self.provenance.register_workflow(dag.workflow_id, {"name": dag.name})
+        for t in dag.tasks.values():
+            t.submit_time = now
+        self._queue_dirty = True
+        self.schedule(now)
+
+    def task_state(self, workflow_id: str, task_id: str) -> TaskState:
+        return self.dags[workflow_id].task(task_id).state
+
+    def workflow_done(self, workflow_id: str) -> bool:
+        return self.dags[workflow_id].finished()
+
+    # ------------------------------------------------------------------
+    # execution callbacks (from the resource manager)
+    # ------------------------------------------------------------------
+    def on_task_started(self, task_id: str, now: float) -> None:
+        task = self._find_task(task_id)
+        if task is None:
+            return
+        task.state = TaskState.RUNNING
+        task.start_time = now
+
+    def on_task_finished(self, task_id: str, now: float, result: TaskResult) -> None:
+        task = self._find_task(task_id)
+        if task is None:
+            return
+        task.end_time = now
+        self._release(task_id)
+
+        if task_id in self.spec_copies:
+            self._finish_speculative_copy(task, now, result)
+        elif result.success:
+            self._finish_success(task, now, result)
+        else:
+            self._handle_failure(task, now, result)
+        self.schedule(now)
+
+    # ------------------------------------------------------------------
+    # the scheduling core
+    # ------------------------------------------------------------------
+    def _context(self, now: float) -> SchedulingContext:
+        return SchedulingContext(
+            dags=self.dags,
+            provenance=self.provenance,
+            predictor=self.predictor,
+            mem_predictor=self.mem_predictor,
+            now=now,
+            staging_bandwidth=self.staging_bandwidth,
+        )
+
+    def schedule(self, now: float) -> int:
+        """Run one scheduling round; returns number of launches issued."""
+        ready: List[Task] = []
+        for dag in self.dags.values():
+            ready.extend(dag.ready_tasks(now))
+        if not ready:
+            return 0
+        ctx = self._context(now)
+        ordered = self.strategy.prioritize(ready, ctx)
+        launched = 0
+        for task in ordered:
+            views = [st.view() for st in self.nodes.values() if st.up]
+            if not views:
+                break
+            mem_alloc = self._memory_for(task)
+            # strategies check fit against the *requested* allocation
+            eff = replace(task.spec, resources=replace(
+                task.spec.resources, mem_bytes=mem_alloc))
+            probe = Task(spec=eff, state=task.state,
+                         submit_time=task.submit_time)
+            node = self.strategy.place(probe, views, ctx)
+            if node is None:
+                continue
+            self._launch(task, node, mem_alloc, now)
+            launched += 1
+        if self.enable_speculation:
+            self.check_speculation(now)
+        return launched
+
+    def _memory_for(self, task: Task) -> int:
+        req = task.spec.resources.mem_bytes
+        if self.mem_predictor is None or not self.use_predicted_memory:
+            # paper retry rule even without the predictor: double on OOM
+            alloc = req * (2 ** task.attempt)
+        else:
+            alloc = self.mem_predictor.allocate(
+                task.name, task.spec.input_size, req, task.attempt
+            )
+        # never request more than the largest node can offer — a doubled
+        # retry beyond cluster capacity would sit unschedulable forever
+        cap = max((st.info.mem_bytes for st in self.nodes.values() if st.up),
+                  default=alloc)
+        return min(alloc, cap)
+
+    def _launch(self, task: Task, node: str, mem_alloc: int, now: float) -> None:
+        st = self.nodes[node]
+        res = task.spec.resources
+        cpus = res.cpus if res.chips == 0 else 0.0
+        st.cpus_free -= cpus
+        st.mem_free -= mem_alloc
+        st.chips_free -= res.chips
+        self.allocations[task.task_id] = _Allocation(node, cpus, mem_alloc, res.chips)
+        self.mem_allocated[task.task_id] = mem_alloc
+        task.state = TaskState.SCHEDULED
+        task.node = node
+        task.schedule_time = now
+        if self.predictor is not None and self.predictor.known(task.name):
+            rt, _ = self.predictor.predict(task.name, task.spec.input_size, node)
+            st.est_available_at = max(st.est_available_at, now) + rt
+        self.adapter.launch(task, node, mem_alloc)
+
+    def _release(self, task_id: str) -> None:
+        alloc = self.allocations.pop(task_id, None)
+        if alloc is None:
+            return
+        st = self.nodes.get(alloc.node)
+        if st is not None:
+            st.cpus_free = min(st.cpus_free + alloc.cpus, st.info.cpus)
+            st.mem_free = min(st.mem_free + alloc.mem, st.info.mem_bytes)
+            st.chips_free = min(st.chips_free + alloc.chips, st.info.chips)
+
+    # ------------------------------------------------------------------
+    # completion paths
+    # ------------------------------------------------------------------
+    def _record(self, task: Task, state: str, result: TaskResult) -> None:
+        self.provenance.record_task(TaskTrace(
+            workflow_id=task.spec.workflow_id,
+            task_id=task.task_id,
+            name=task.name,
+            attempt=task.attempt,
+            node=task.node,
+            submit_time=task.submit_time,
+            schedule_time=task.schedule_time,
+            start_time=task.start_time,
+            end_time=task.end_time,
+            state=state,
+            input_size=task.spec.input_size,
+            output_size=sum(o.size_bytes for o in task.spec.outputs),
+            cpu_seconds=result.cpu_seconds,
+            peak_mem_bytes=result.peak_mem_bytes,
+            requested_mem_bytes=self.mem_allocated.get(task.task_id, 0),
+            chips=task.spec.resources.chips,
+            failure_reason=result.reason,
+        ))
+
+    def _finish_success(self, task: Task, now: float, result: TaskResult) -> None:
+        task.state = TaskState.SUCCEEDED
+        self._record(task, "SUCCEEDED", result)
+        # outputs become resident on the executing node (data locality)
+        task.spec.outputs = tuple(
+            DataRef(o.name, o.size_bytes, task.node) for o in task.spec.outputs
+        )
+        self._propagate_locations(task)
+        # online learning (paper §5): feed predictors from the completion
+        if self.predictor is not None and task.runtime_s > 0:
+            self.predictor.observe(
+                task.name, task.spec.input_size, task.runtime_s, task.node
+            )
+        if self.mem_predictor is not None and result.peak_mem_bytes > 0:
+            self.mem_predictor.observe(
+                task.name, task.spec.input_size, result.peak_mem_bytes
+            )
+        self.strategy.on_task_finished(task, self._context(now))
+        # a successful original kills its speculative copy and vice versa
+        copy_id = self.spec_of_original.pop(task.task_id, None)
+        if copy_id is not None:
+            copy = self.spec_copies.pop(copy_id, None)
+            if copy is not None and not copy.state.terminal:
+                copy.state = TaskState.KILLED
+                self._release(copy_id)
+                self.adapter.kill(copy_id)
+        dag = self.dags[task.spec.workflow_id]
+        if dag.finished() and self.on_workflow_done is not None:
+            self.on_workflow_done(dag.workflow_id)
+
+    def _propagate_locations(self, task: Task) -> None:
+        """Children's matching inputs inherit the producing node (for HEFT's
+        staging term and data-aware placement)."""
+        dag = self.dags[task.spec.workflow_id]
+        outs = {o.name: o for o in task.spec.outputs}
+        for child_id in dag.children[task.task_id]:
+            child = dag.tasks[child_id]
+            child.spec.inputs = tuple(
+                outs.get(i.name, i) if i.name in outs else i
+                for i in child.spec.inputs
+            )
+
+    def _handle_failure(self, task: Task, now: float, result: TaskResult,
+                        requeue_free: bool = False) -> None:
+        self._record(task, "FAILED", result)
+        if not requeue_free:
+            task.attempt += 1
+        if task.attempt > task.spec.max_retries:
+            task.state = TaskState.ERROR
+            task.failure_reason = result.reason
+            log.warning("task %s permanently failed: %s", task.task_id, result.reason)
+            dag = self.dags[task.spec.workflow_id]
+            if dag.finished() and self.on_workflow_done is not None:
+                self.on_workflow_done(dag.workflow_id)
+            return
+        task.state = TaskState.READY
+        task.node = None
+        task.failure_reason = result.reason
+
+    # ------------------------------------------------------------------
+    # straggler mitigation: speculative execution
+    # ------------------------------------------------------------------
+    def check_speculation(self, now: float) -> int:
+        """Launch backup copies of tasks running far beyond their prediction."""
+        if self.predictor is None:
+            return 0
+        launched = 0
+        for tid, alloc in list(self.allocations.items()):
+            if tid in self.spec_copies or tid in self.spec_of_original:
+                continue
+            task = self._find_task(tid)
+            if task is None or task.state != TaskState.RUNNING:
+                continue
+            if not self.predictor.known(task.name):
+                continue
+            rt, std = self.predictor.predict(task.name, task.spec.input_size, alloc.node)
+            elapsed = now - task.start_time
+            threshold = max(self.speculation_min_runtime,
+                            self.speculation_factor * (rt + std))
+            if elapsed < threshold:
+                continue
+            copy_id = fresh_task_id(f"spec-{task.task_id}")
+            copy_spec = replace(task.spec, task_id=copy_id)
+            copy = Task(spec=copy_spec, state=TaskState.READY,
+                        submit_time=now, speculative_of=tid)
+            views = [st.view() for st in self.nodes.values()
+                     if st.up and st.info.name != alloc.node]
+            mem_alloc = self.mem_allocated.get(tid, task.spec.resources.mem_bytes)
+            target = next((v.name for v in views if v.fits(copy, mem_alloc)), None)
+            if target is None:
+                continue
+            self.spec_copies[copy_id] = copy
+            self.spec_of_original[tid] = copy_id
+            self._launch(copy, target, mem_alloc, now)
+            launched += 1
+            log.info("speculative copy %s of %s on %s", copy_id, tid, target)
+        return launched
+
+    def _finish_speculative_copy(self, copy: Task, now: float,
+                                 result: TaskResult) -> None:
+        orig_id = copy.speculative_of
+        self.spec_copies.pop(copy.task_id, None)
+        if orig_id is not None:
+            self.spec_of_original.pop(orig_id, None)
+        if not result.success or orig_id is None:
+            copy.state = TaskState.FAILED
+            self._record(copy, "FAILED", result)
+            return
+        orig = self._find_task(orig_id)
+        if orig is None or orig.state.terminal:
+            copy.state = TaskState.KILLED      # lost the race
+            self._record(copy, "KILLED", result)
+            return
+        # copy won: kill the straggling original, credit the workflow task
+        copy.state = TaskState.SUCCEEDED
+        self._record(copy, "SUCCEEDED", result)
+        self._release(orig_id)
+        self.adapter.kill(orig_id)
+        orig.node = copy.node
+        orig.start_time = copy.start_time
+        orig.end_time = now
+        self._finish_success(orig, now, result)
+
+    # ------------------------------------------------------------------
+    def _find_task(self, task_id: str) -> Optional[Task]:
+        if task_id in self.spec_copies:
+            return self.spec_copies[task_id]
+        for dag in self.dags.values():
+            if task_id in dag:
+                return dag.task(task_id)
+        return None
+
+    def stats(self) -> Dict[str, Any]:
+        return {
+            "strategy": self.strategy.name,
+            "nodes": {n: s.up for n, s in self.nodes.items()},
+            "workflows": {w: d.finished() for w, d in self.dags.items()},
+            "running": len(self.allocations),
+        }

@@ -1,0 +1,347 @@
+"""Scheduling strategies for the Common Workflow Scheduler.
+
+``Original`` reproduces the baseline the paper measures against (the plain
+SWMS→Kubernetes interaction: FIFO submission order, workflow-blind spread
+placement). ``RankStrategy("min")`` is the paper's headline **Rank (Min)
+Round Robin**. ``HEFT`` and ``Tarema`` are the §5 "advanced resource
+management" integrations, fed by the prediction plugins.
+
+A strategy answers two questions, and only these two:
+  * ``prioritize(ready_tasks, ctx)`` — in which order should ready tasks grab
+    resources?
+  * ``place(task, nodes, ctx)``      — which node/slice should a task run on
+    (or ``None`` → leave queued)?
+The engine (scheduler.py) owns everything else: state machines, retries,
+resource accounting, speculation.
+"""
+from __future__ import annotations
+
+import itertools
+from abc import ABC, abstractmethod
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, TYPE_CHECKING
+
+from .dag import Task, WorkflowDAG
+
+if TYPE_CHECKING:  # pragma: no cover
+    from .predict import FeedbackMemoryPredictor, LotaruPredictor
+    from .provenance import ProvenanceStore
+
+
+@dataclass
+class NodeView:
+    """What a strategy may know about a node (read-only snapshot)."""
+
+    name: str
+    cpus_total: float
+    mem_total: int
+    cpus_free: float
+    mem_free: int
+    chips_total: int = 0
+    chips_free: int = 0
+    speed_factor: float = 1.0
+    labels: Dict[str, str] = field(default_factory=dict)
+    # engine-maintained estimate of when currently-running work drains:
+    est_available_at: float = 0.0
+
+    def fits(self, task: Task, mem_alloc: Optional[int] = None) -> bool:
+        res = task.spec.resources
+        mem = mem_alloc if mem_alloc is not None else res.mem_bytes
+        if res.chips > 0:
+            return self.chips_free >= res.chips and self.mem_free >= mem
+        return self.cpus_free >= res.cpus and self.mem_free >= mem
+
+
+@dataclass
+class SchedulingContext:
+    dags: Dict[str, WorkflowDAG]
+    provenance: "ProvenanceStore"
+    predictor: Optional["LotaruPredictor"] = None
+    mem_predictor: Optional["FeedbackMemoryPredictor"] = None
+    now: float = 0.0
+    # bytes/s assumed for staging inputs across nodes (HEFT comm term);
+    # the TPU adaptation sets this to the DCN bandwidth between pods.
+    staging_bandwidth: float = 1e9
+
+    def dag_of(self, task: Task) -> WorkflowDAG:
+        return self.dags[task.spec.workflow_id]
+
+
+class Strategy(ABC):
+    name: str = "abstract"
+
+    @abstractmethod
+    def prioritize(self, tasks: List[Task], ctx: SchedulingContext) -> List[Task]:
+        ...
+
+    @abstractmethod
+    def place(self, task: Task, nodes: List[NodeView],
+              ctx: SchedulingContext) -> Optional[str]:
+        ...
+
+    # hook for strategies that learn from completions (e.g. Tarema labels)
+    def on_task_finished(self, task: Task, ctx: SchedulingContext) -> None:
+        pass
+
+
+# ---------------------------------------------------------------------------
+# placement helpers
+# ---------------------------------------------------------------------------
+def _fitting(task: Task, nodes: Sequence[NodeView]) -> List[NodeView]:
+    return [n for n in nodes if n.fits(task)]
+
+
+class _RoundRobinPlacer:
+    """Stateful round-robin over node names (the paper's 'Round Robin'):
+    a persistent pointer walks a fixed node ring and advances to the next
+    node that fits — stable under churn in the fitting set."""
+
+    def __init__(self) -> None:
+        self._ring: List[str] = []
+        self._ptr = 0
+
+    def pick(self, task: Task, nodes: Sequence[NodeView]) -> Optional[str]:
+        names = sorted(n.name for n in nodes)
+        if names != self._ring:
+            self._ring = names
+            self._ptr %= max(len(names), 1)
+        fit = {n.name for n in _fitting(task, nodes)}
+        if not fit:
+            return None
+        for i in range(len(self._ring)):
+            cand = self._ring[(self._ptr + i) % len(self._ring)]
+            if cand in fit:
+                self._ptr = (self._ptr + i + 1) % len(self._ring)
+                return cand
+        return None
+
+
+# ---------------------------------------------------------------------------
+# Original: the workflow-blind baseline (Fig. 2 "Original strategy")
+# ---------------------------------------------------------------------------
+class OriginalStrategy(Strategy):
+    """FIFO order; k8s-default-like placement: spread to the node with the
+    most free resources. No DAG knowledge whatsoever."""
+
+    name = "original"
+
+    def prioritize(self, tasks: List[Task], ctx: SchedulingContext) -> List[Task]:
+        return sorted(tasks, key=lambda t: (t.ready_time, t.submit_time, t.task_id))
+
+    def place(self, task: Task, nodes: List[NodeView],
+              ctx: SchedulingContext) -> Optional[str]:
+        fit = _fitting(task, nodes)
+        if not fit:
+            return None
+        # "LeastAllocated" spread scoring, as the default kube-scheduler does.
+        return max(
+            fit,
+            key=lambda n: (n.cpus_free / max(n.cpus_total, 1e-9))
+            + (n.mem_free / max(n.mem_total, 1)),
+        ).name
+
+
+class FIFORoundRobin(Strategy):
+    """FIFO + round-robin placement (ablation between Original and Rank)."""
+
+    name = "fifo_rr"
+
+    def __init__(self) -> None:
+        self._rr = _RoundRobinPlacer()
+
+    def prioritize(self, tasks: List[Task], ctx: SchedulingContext) -> List[Task]:
+        return sorted(tasks, key=lambda t: (t.ready_time, t.submit_time, t.task_id))
+
+    def place(self, task, nodes, ctx):
+        return self._rr.pick(task, nodes)
+
+
+# ---------------------------------------------------------------------------
+# Rank strategies — the paper's contribution class. Rank (Min) Round Robin is
+# the headline configuration (median improvement up to 24.8%, avg 10.8%).
+# ---------------------------------------------------------------------------
+class RankStrategy(Strategy):
+    """Order ready tasks by DAG upward rank (longest path to a sink), i.e.
+    push the critical path first; ties broken by input size (``min`` → small
+    inputs first, ``max`` → large first). Placement: round robin."""
+
+    def __init__(self, tie: str = "min") -> None:
+        assert tie in ("min", "max")
+        self.tie = tie
+        self.name = f"rank_{tie}_rr"
+        self._rr = _RoundRobinPlacer()
+
+    def prioritize(self, tasks: List[Task], ctx: SchedulingContext) -> List[Task]:
+        keyed = []
+        for t in tasks:
+            rank = ctx.dag_of(t).ranks()[t.task_id]
+            size = t.spec.input_size
+            tie = size if self.tie == "min" else -size
+            keyed.append(((-rank, tie, t.ready_time, t.task_id), t))
+        keyed.sort(key=lambda kv: kv[0])
+        return [t for _, t in keyed]
+
+    def place(self, task, nodes, ctx):
+        return self._rr.pick(task, nodes)
+
+
+# ---------------------------------------------------------------------------
+# HEFT (dynamic variant) — predictor-fed (§5 "Workflow Task Scheduling")
+# ---------------------------------------------------------------------------
+class HEFTStrategy(Strategy):
+    """Upward ranks weighted by *predicted* runtimes; placement minimises
+    Earliest Finish Time using per-node speed factors, the engine's
+    node-drain estimates, and an input-staging term. Falls back to unit
+    weights while the predictor is cold (making it ≈ RankStrategy)."""
+
+    name = "heft"
+
+    def prioritize(self, tasks: List[Task], ctx: SchedulingContext) -> List[Task]:
+        if ctx.predictor is None:
+            return RankStrategy("min").prioritize(tasks, ctx)
+        keyed = []
+        for t in tasks:
+            dag = ctx.dag_of(t)
+            weights = {
+                tid: (
+                    ctx.predictor.predict(dag.tasks[tid].name,
+                                          dag.tasks[tid].spec.input_size)[0]
+                    if ctx.predictor.known(dag.tasks[tid].name)
+                    else 1.0
+                )
+                for tid in dag.tasks
+            }
+            rank = dag.ranks(weights)[t.task_id]
+            keyed.append(((-rank, t.ready_time, t.task_id), t))
+        keyed.sort(key=lambda kv: kv[0])
+        return [t for _, t in keyed]
+
+    def place(self, task: Task, nodes: List[NodeView],
+              ctx: SchedulingContext) -> Optional[str]:
+        fit = _fitting(task, nodes)
+        if not fit:
+            return None
+        if ctx.predictor is None or not ctx.predictor.known(task.name):
+            return max(fit, key=lambda n: n.speed_factor).name
+
+        def eft(n: NodeView) -> float:
+            rt, _ = ctx.predictor.predict(task.name, task.spec.input_size, n.name)
+            # staging: inputs not already resident on n travel over the wire
+            remote = sum(
+                r.size_bytes for r in task.spec.inputs
+                if r.location is not None and r.location != n.name
+            )
+            start = max(ctx.now, n.est_available_at)
+            return start + remote / ctx.staging_bandwidth + rt
+
+        return min(fit, key=eft).name
+
+
+# ---------------------------------------------------------------------------
+# Tarema — node labeling + task labeling (Bader et al., BigData'21)
+# ---------------------------------------------------------------------------
+class TaremaStrategy(Strategy):
+    """Groups nodes into performance labels from their benchmark scores and
+    task types into demand labels from observed resource usage; high-demand
+    task groups are steered to high-performance node groups. Requires no
+    runtime estimates — only relative usage — matching the paper's framing.
+    """
+
+    name = "tarema"
+
+    def __init__(self, n_groups: int = 3) -> None:
+        self.n_groups = n_groups
+        self._task_stats: Dict[str, List[float]] = {}
+
+    # -- labelling --
+    def _node_groups(self, nodes: List[NodeView]) -> Dict[str, int]:
+        """Quantile-bucket nodes by speed factor → group 0 (slow) .. k-1."""
+        spd = sorted(set(n.speed_factor for n in nodes))
+        if len(spd) <= 1:
+            return {n.name: 0 for n in nodes}
+        buckets = min(self.n_groups, len(spd))
+        bounds = [spd[int(len(spd) * (i + 1) / buckets) - 1] for i in range(buckets)]
+        out = {}
+        for n in nodes:
+            for g, b in enumerate(bounds):
+                if n.speed_factor <= b + 1e-12:
+                    out[n.name] = g
+                    break
+        return out
+
+    def _task_group(self, name: str) -> int:
+        """Quantile-bucket task types by mean observed cpu·runtime demand."""
+        if name not in self._task_stats or len(self._task_stats) <= 1:
+            return self.n_groups - 1          # unknown → assume demanding
+        means = {k: sum(v) / len(v) for k, v in self._task_stats.items() if v}
+        if name not in means:
+            return self.n_groups - 1
+        ordered = sorted(means.values())
+        mine = means[name]
+        idx = sum(1 for m in ordered if m < mine)
+        return min(int(idx * self.n_groups / max(len(ordered), 1)), self.n_groups - 1)
+
+    def on_task_finished(self, task: Task, ctx: SchedulingContext) -> None:
+        self._task_stats.setdefault(task.name, []).append(
+            task.runtime_s * max(task.spec.resources.cpus, 1.0)
+        )
+
+    # -- strategy --
+    def prioritize(self, tasks: List[Task], ctx: SchedulingContext) -> List[Task]:
+        return RankStrategy("min").prioritize(tasks, ctx)
+
+    def place(self, task: Task, nodes: List[NodeView],
+              ctx: SchedulingContext) -> Optional[str]:
+        fit = _fitting(task, nodes)
+        if not fit:
+            return None
+        groups = self._node_groups(nodes)
+        want = self._task_group(task.name)
+        n_node_groups = max(groups.values()) + 1 if groups else 1
+        want = min(want, n_node_groups - 1)
+        best = [n for n in fit if groups.get(n.name, 0) == want]
+        pool = best or fit
+        # within the matched group, spread by free cpu
+        return max(pool, key=lambda n: n.cpus_free).name
+
+
+# ---------------------------------------------------------------------------
+# Fair share across workflows (Yarn-like; used as a multi-tenancy ablation)
+# ---------------------------------------------------------------------------
+class FairStrategy(Strategy):
+    name = "fair"
+
+    def __init__(self) -> None:
+        self._rr = _RoundRobinPlacer()
+
+    def prioritize(self, tasks: List[Task], ctx: SchedulingContext) -> List[Task]:
+        running: Dict[str, int] = {}
+        for wid, dag in ctx.dags.items():
+            running[wid] = sum(1 for t in dag.tasks.values() if t.state.active)
+        return sorted(
+            tasks,
+            key=lambda t: (running.get(t.spec.workflow_id, 0), t.submit_time, t.task_id),
+        )
+
+    def place(self, task, nodes, ctx):
+        return self._rr.pick(task, nodes)
+
+
+STRATEGIES = {
+    "original": OriginalStrategy,
+    "fifo_rr": FIFORoundRobin,
+    "rank_min_rr": lambda: RankStrategy("min"),
+    "rank_max_rr": lambda: RankStrategy("max"),
+    "heft": HEFTStrategy,
+    "tarema": TaremaStrategy,
+    "fair": FairStrategy,
+}
+
+
+def make_strategy(name: str) -> Strategy:
+    try:
+        return STRATEGIES[name]()  # type: ignore[operator]
+    except KeyError:
+        raise ValueError(
+            f"unknown strategy {name!r}; available: {sorted(STRATEGIES)}"
+        ) from None

@@ -1,0 +1,1 @@
+from .pipeline import DataConfig, TokenPipeline, synthetic_extras  # noqa: F401

@@ -1,0 +1,9 @@
+# Pallas TPU kernels for the substrate's compute hot-spots:
+#   flash_attention  — causal/SWA/GQA fused attention (VMEM-tiled, online
+#                      softmax)
+#   moe_gmm          — grouped expert GEMM (capacity-bucketed, MXU tiles)
+#   ssd_scan         — Mamba2 SSD chunked scan (state carried in VMEM)
+#   rmsnorm          — fused single-pass norm
+# Each has a pure-jnp oracle in ref.py; ops.py exposes jit'd wrappers that
+# interpret on CPU and compile natively on TPU.
+from . import ops, ref  # noqa: F401

@@ -1,0 +1,70 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels execute in interpret mode — Python
+evaluation of the kernel body, used by the test suite to validate against
+the ``ref.py`` oracles. On TPU backends they compile natively. The model
+code calls these through ``use_pallas=True``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import (
+    flash_attention_bwd,
+    flash_attention_fwd,
+    flash_attention_pallas,
+)
+from .moe_gmm import moe_gmm_pallas
+from .rmsnorm import rmsnorm_pallas
+from .ssd_scan import ssd_scan_pallas
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# differentiable flash attention: Pallas forward + Pallas flash-v2 backward
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _flash(q, k, v, causal: bool, window: int):
+    return flash_attention_fwd(q, k, v, causal=causal, window=window,
+                               interpret=_interpret())[0]
+
+
+def _flash_fwd(q, k, v, causal, window):
+    o, lse = flash_attention_fwd(q, k, v, causal=causal, window=window,
+                                 interpret=_interpret())
+    return o, (q, k, v, o, lse)
+
+
+def _flash_bwd(causal, window, res, do):
+    q, k, v, o, lse = res
+    return flash_attention_bwd(q, k, v, o, lse, do, causal=causal,
+                               window=window, interpret=_interpret())
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0):
+    return _flash(q, k, v, causal, window)
+
+
+@jax.jit
+def rmsnorm(x, scale, eps: float = 1e-6):
+    return rmsnorm_pallas(x, scale, eps, interpret=_interpret())
+
+
+@jax.jit
+def moe_gmm(buf, w):
+    return moe_gmm_pallas(buf, w, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def ssd_scan(xh, dt, a, B_, C_, *, chunk: int = 256):
+    return ssd_scan_pallas(xh, dt, a, B_, C_, chunk=chunk,
+                           interpret=_interpret())

@@ -1,0 +1,77 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+These are *the* semantics; kernels must match them on all shape/dtype sweeps
+(tests/test_kernels.py). They deliberately share no code with the kernels.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def rmsnorm_ref(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return ((xf * jax.lax.rsqrt(var + eps)) * scale.astype(jnp.float32)
+            ).astype(x.dtype)
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, window: int = 0) -> jax.Array:
+    """q: (B, S, Hq, D); k/v: (B, T, Hkv, D) → (B, S, Hq, D)."""
+    B, S, Hq, D = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    g = Hq // Hkv
+    qh = q.reshape(B, S, Hkv, g, D)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qh, k).astype(jnp.float32)
+    scores = scores / math.sqrt(D)
+    q_pos = jnp.arange(S)[:, None]
+    k_pos = jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), bool) if not causal else (k_pos <= q_pos)
+    if window > 0:
+        mask = mask & (k_pos > q_pos - window)
+    scores = jnp.where(mask[None, None, None], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v)
+    return out.reshape(B, S, Hq, D)
+
+
+def moe_gmm_ref(buf: jax.Array, w: jax.Array) -> jax.Array:
+    """Grouped GEMM: (E, C, d) × (E, d, f) → (E, C, f)."""
+    return jnp.einsum("ecd,edf->ecf", buf, w)
+
+
+def ssd_scan_ref(xh: jax.Array, dt: jax.Array, a: jax.Array,
+                 B_: jax.Array, C_: jax.Array,
+                 h0: Optional[jax.Array] = None,
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Sequential (non-chunked) SSD recurrence — the ground truth.
+
+    xh: (B, S, H, P); dt: (B, S, H); a: (H,) ≤ 0; B_/C_: (B, S, G, N).
+    h_t = h_{t-1}·exp(dt_t·a) + dt_t·x_t⊗B_t;  y_t = C_t·h_t.
+    Returns (y: (B, S, H, P), h_final: (B, H, P, N)).
+    """
+    Bb, S, H, P = xh.shape
+    G, N = B_.shape[2], B_.shape[3]
+    R = H // G
+    if h0 is None:
+        h0 = jnp.zeros((Bb, H, P, N), jnp.float32)
+
+    def step(h, inp):
+        x_t, dt_t, b_t, c_t = inp                       # (B,H,P),(B,H),(B,G,N)
+        dA = jnp.exp(dt_t * a[None, :])                 # (B,H)
+        bh = jnp.repeat(b_t.astype(jnp.float32), R, axis=1)  # groups→heads
+        ch = jnp.repeat(c_t.astype(jnp.float32), R, axis=1)
+        xb = jnp.einsum("bhp,bhn->bhpn",
+                        (x_t * dt_t[..., None]).astype(jnp.float32), bh)
+        h = h * dA[..., None, None] + xb
+        y = jnp.einsum("bhn,bhpn->bhp", ch, h)
+        return h, y
+
+    xs = (xh.transpose(1, 0, 2, 3), dt.transpose(1, 0, 2),
+          B_.transpose(1, 0, 2, 3), C_.transpose(1, 0, 2, 3))
+    h_final, ys = jax.lax.scan(step, h0, xs)
+    return ys.transpose(1, 0, 2, 3).astype(xh.dtype), h_final

@@ -1,0 +1,46 @@
+"""Fused RMSNorm Pallas kernel.
+
+Memory-bound fusion: one pass over the rows — read x, compute the f32
+mean-square in VREGs, scale, write — instead of XLA's separate
+square/reduce/rsqrt/mul chain. Rows are tiled (block_rows, d) into VMEM;
+``d`` stays whole per block (norm axis must be resident).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, s_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)                 # (bm, d)
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(ms + eps)
+    o_ref[...] = (y * s_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+def rmsnorm_pallas(x: jax.Array, scale: jax.Array, eps: float = 1e-6,
+                   block_rows: int = 256, interpret: bool = False
+                   ) -> jax.Array:
+    orig_shape = x.shape
+    d = x.shape[-1]
+    rows = x.size // d
+    x2 = x.reshape(rows, d)
+    bm = min(block_rows, rows)
+    while rows % bm:
+        bm //= 2
+    bm = max(bm, 1)
+    out = pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=(rows // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, d), x.dtype),
+        interpret=interpret,
+    )(x2, scale)
+    return out.reshape(orig_shape)

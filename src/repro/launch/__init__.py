@@ -1,0 +1,1 @@
+# Launchers: mesh builders, the multi-pod dry-run, train/serve drivers.

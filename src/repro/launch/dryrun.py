@@ -1,0 +1,232 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above MUST stay first: jax locks the device count on first
+initialisation, and the production meshes need 512 placeholder host devices.
+Everything else in the repo sees the real topology (this env var is set only
+in this process).
+
+Usage:
+    python -m repro.launch.dryrun --arch qwen2-7b --shape train_4k
+    python -m repro.launch.dryrun --arch qwen2-7b --shape train_4k --multi-pod
+    python -m repro.launch.dryrun --all [--multi-pod] [--skip-done]
+    python -m repro.launch.dryrun --list
+
+Each cell writes ``results/dryrun/<arch>__<shape>__<mesh>.json`` with the
+memory analysis, cost analysis, collective schedule and §Roofline terms.
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import ARCHS, SHAPES, get_config
+from ..configs.base import ShapeConfig, TrainConfig
+from ..models.model import Model
+from ..runtime.serve import make_prefill_step, make_serve_step
+from ..runtime.sharding import shardings_for_tree, train_rules, input_axes
+from ..runtime.train import make_train_step
+from .analysis import (
+    GiB,
+    analytic_cell,
+    model_flops_for_cell,
+    roofline_from_compiled,
+)
+from .mesh import make_production_mesh
+from ..runtime.train import n_microbatches
+
+RESULTS_DIR = os.path.join("results", "dryrun")
+POD_STRIDE = 256          # device ids ≥256 apart ⇒ cross-pod (DCN) traffic
+ATTENTION_IMPL = "naive"  # byte model for attention: naive (XLA) | flash
+
+
+def np_prod(shape) -> int:
+    n = 1
+    for s in shape:
+        n *= int(s)
+    return n
+
+
+def mesh_desc(multi_pod: bool) -> str:
+    return "2x16x16" if multi_pod else "16x16"
+
+
+def cell_path(arch: str, shape: str, multi_pod: bool) -> str:
+    return os.path.join(RESULTS_DIR,
+                        f"{arch}__{shape}__{mesh_desc(multi_pod)}.json")
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               overrides: Optional[Dict[str, Any]] = None):
+    """Build the step for one cell and return (lowered, model, extras)."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    model = Model(cfg)
+    tcfg = TrainConfig(**(overrides or {}).get("train", {}))
+
+    with mesh:
+        if shape.kind == "train":
+            step, state_sh, batch_sh, state_specs = make_train_step(
+                model, tcfg, shape, mesh, multi_pod)
+            batch_specs = model.input_specs(shape)
+            lowered = jax.jit(
+                step, in_shardings=(state_sh, batch_sh),
+                out_shardings=(state_sh, None),
+                donate_argnums=(0,),
+            ).lower(state_specs, batch_specs)
+        elif shape.kind == "prefill":
+            step, arg_sh, arg_specs = make_prefill_step(
+                model, shape, mesh, multi_pod)
+            lowered = jax.jit(
+                step, in_shardings=(arg_sh,),
+            ).lower(arg_specs)
+        else:  # decode
+            step, shardings, specs = make_serve_step(
+                model, shape, mesh, multi_pod)
+            lowered = jax.jit(
+                step,
+                in_shardings=(shardings["params"], shardings["cache"],
+                              shardings["token"], shardings["pos"]),
+                donate_argnums=(1,),
+            ).lower(specs["params"], specs["cache"], specs["token"],
+                    specs["pos"])
+    return lowered, model, mesh
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             verbose: bool = True) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    t0 = time.time()
+    if shape_name in cfg.skip_shapes:
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_desc(multi_pod),
+               "status": "skip", "reason": cfg.skip_reasons.get(shape_name, "")}
+        _write(rec, arch, shape_name, multi_pod)
+        return rec
+
+    lowered, model, mesh = lower_cell(arch, shape_name, multi_pod)
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    chips = 512 if multi_pod else 256
+    tcfg = TrainConfig()
+    n_micro = (n_microbatches(shape, mesh, tcfg, multi_pod)
+               if shape.kind == "train" else 1)
+    cache_bytes = 0
+    if shape.kind == "decode":
+        cache_bytes = sum(
+            int(np_prod(s.shape)) * s.dtype.itemsize
+            for s in jax.tree.leaves(
+                model.cache_specs(shape.global_batch, shape.seq_len)))
+    ana = analytic_cell(
+        cfg, shape, chips=chips, n_micro=n_micro,
+        param_bytes=model.n_params() * 2, cache_bytes=cache_bytes,
+        remat=(tcfg.remat != "none"), attention_impl=ATTENTION_IMPL)
+    # irreducible HBM traffic: every step must at least read the (active)
+    # weights; decode must additionally read the cache once
+    param_bytes = model.n_params() * 2
+    if cfg.family == "moe" and shape.kind == "decode":
+        param_bytes = cfg.active_param_count() * 2  # EP: only routed experts
+    min_bytes = param_bytes + (cache_bytes if shape.kind == "decode" else 0)
+    report = roofline_from_compiled(
+        compiled, arch=arch, shape=shape_name, mesh_desc=mesh_desc(multi_pod),
+        chips=chips, model_flops=model_flops_for_cell(cfg, shape, model),
+        analytic=ana, min_bytes=float(min_bytes),
+        pod_stride=POD_STRIDE if multi_pod else 1 << 62,
+    )
+    rec = {
+        "status": "ok",
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "n_params": model.n_params(),
+        "n_params_active": cfg.active_param_count(),
+        **report.to_json(),
+    }
+    _write(rec, arch, shape_name, multi_pod)
+    if verbose:
+        print(f"[dryrun] {arch} × {shape_name} × {mesh_desc(multi_pod)}: "
+              f"compile {t_compile:.0f}s  "
+              f"compute {report.compute_s*1e3:.2f}ms  "
+              f"memory {report.memory_s*1e3:.2f}ms  "
+              f"collective {report.collective_s*1e3:.2f}ms  "
+              f"dominant={report.dominant}  "
+              f"hbm/dev={report.per_device_hbm_bytes/GiB:.2f}GiB  "
+              f"useful={report.useful_ratio:.2f}")
+        print(json.dumps({k: rec["memory_analysis"].get(k) for k in
+                          sorted(rec["memory_analysis"])}, indent=None))
+    return rec
+
+
+def _write(rec: Dict[str, Any], arch: str, shape: str, multi_pod: bool) -> None:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(cell_path(arch, shape, multi_pod), "w") as f:
+        json.dump(rec, f, indent=1)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCHS), default=None)
+    ap.add_argument("--shape", choices=sorted(SHAPES), default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--skip-done", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--flash", action="store_true",
+                    help="roofline terms under the Pallas flash-attention "
+                         "byte model (the TPU-target path); results go to "
+                         "results/dryrun_flash/")
+    args = ap.parse_args()
+    if args.flash:
+        global RESULTS_DIR, ATTENTION_IMPL
+        RESULTS_DIR = os.path.join("results", "dryrun_flash")
+        ATTENTION_IMPL = "flash"
+
+    if args.list:
+        for a in ARCHS:
+            for s in SHAPES:
+                skip = s in ARCHS[a].skip_shapes
+                print(f"{a:24s} {s:12s} {'SKIP' if skip else ''}")
+        return 0
+
+    cells = []
+    if args.all:
+        meshes = [False, True] if args.both_meshes else [args.multi_pod]
+        for a in ARCHS:
+            for s in SHAPES:
+                for mp in meshes:
+                    cells.append((a, s, mp))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape, args.multi_pod)]
+
+    failures = []
+    for a, s, mp in cells:
+        if args.skip_done and os.path.exists(cell_path(a, s, mp)):
+            with open(cell_path(a, s, mp)) as f:
+                if json.load(f).get("status") in ("ok", "skip"):
+                    continue
+        try:
+            run_cell(a, s, mp)
+        except Exception as e:  # noqa: BLE001
+            traceback.print_exc()
+            _write({"status": "fail", "error": f"{type(e).__name__}: {e}",
+                    "arch": a, "shape": s, "mesh": mesh_desc(mp)}, a, s, mp)
+            failures.append((a, s, mp))
+    if failures:
+        print(f"[dryrun] {len(failures)} FAILURES: {failures}")
+        return 1
+    print("[dryrun] all cells green")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

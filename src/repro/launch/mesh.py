@@ -1,0 +1,36 @@
+"""Production mesh builders.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state. The dry-run process sets XLA_FLAGS to fake 512 host devices *before*
+any jax import; everything else sees the real (single-CPU) topology.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]) -> Mesh:
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh() -> Mesh:
+    """Whatever this host actually has (tests/examples: 1 CPU device)."""
+    n = len(jax.devices())
+    return jax.make_mesh((1, n), ("data", "model")) if n > 1 else \
+        jax.make_mesh((1, 1), ("data", "model"))
+
+
+def mesh_device_count(mesh: Mesh) -> int:
+    n = 1
+    for v in mesh.shape.values():
+        n *= v
+    return n

@@ -1,0 +1,126 @@
+"""Training driver: CWS-orchestrated, checkpointed, resumable.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen1.5-0.5b --smoke \
+        --steps 60 --chunk 10 --ckpt-dir /tmp/ckpt
+    # kill it any time; rerun the same command → resumes from the last
+    # committed checkpoint with bit-identical data order.
+
+``--preset 100m`` trains a ~100M-param dense model (full-size run for real
+hardware; on CPU use --smoke). The training job is compiled into a workflow
+DAG and scheduled through the CWSI (chunks → eval → checkpoint tasks), so
+restarts, provenance, and runtime prediction all come from the CWS.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..checkpoint import latest_checkpoint, restore_checkpoint, save_checkpoint
+from ..configs import get_config
+from ..configs.base import ShapeConfig, TrainConfig
+from ..data import DataConfig, TokenPipeline
+from ..models import build_model
+from ..runtime.orchestrator import (
+    LocalRuntime,
+    SharedState,
+    TrainJobSpec,
+    build_training_workflow,
+)
+from ..runtime.train import init_state, make_train_step
+from .mesh import make_host_mesh
+
+
+def preset_100m(cfg):
+    """~100M-param dense config of the same family (full driver target)."""
+    return cfg.scaled(n_layers=12, d_model=768, n_heads=12, n_kv_heads=12,
+                      d_ff=3072, vocab=32768)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--preset", choices=["none", "100m"], default="none")
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--chunk", type=int, default=10)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--strategy", default="rank_min_rr")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    if args.preset == "100m":
+        cfg = preset_100m(cfg)
+    model = build_model(cfg)
+    print(f"[train] arch={cfg.name} params={model.n_params():,}")
+
+    shape = ShapeConfig("driver", args.seq, args.batch, "train")
+    tcfg = TrainConfig(learning_rate=args.lr, warmup_steps=10,
+                       microbatch_per_device=args.batch)
+    mesh = make_host_mesh()
+    step, _, _, _ = make_train_step(model, tcfg, shape, mesh,
+                                    total_steps=args.steps)
+    jstep = jax.jit(step, donate_argnums=(0,))
+    pipe = TokenPipeline(DataConfig(vocab=cfg.vocab, seq_len=args.seq,
+                                    global_batch=args.batch, seed=args.seed))
+
+    state = init_state(model, tcfg, jax.random.PRNGKey(args.seed),
+                       total_steps=args.steps)
+    start_step = 0
+    if args.ckpt_dir:
+        ck = latest_checkpoint(args.ckpt_dir)
+        if ck:
+            state, manifest = restore_checkpoint(ck, state)
+            start_step = int(manifest["step"])
+            print(f"[train] resumed from {ck} at step {start_step}")
+
+    shared = SharedState(state)
+
+    def run_chunk(sh: SharedState, start: int, stop: int):
+        loss = float("nan")
+        for s in range(start, stop):
+            batch = {k: jnp.asarray(v) for k, v in pipe.batch(s).items()}
+            sh.state, m = jstep(sh.state, batch)
+            loss = float(m["loss"])
+        print(f"[train] step {stop:5d} loss {loss:.4f} "
+              f"lr {float(m['lr']):.2e} gnorm {float(m['grad_norm']):.2f}")
+        return {"step": stop, "loss": loss}
+
+    def run_ckpt(sh: SharedState, step_no: int):
+        save_checkpoint(args.ckpt_dir, step_no, sh.state,
+                        {"arch": cfg.name})
+        print(f"[train] checkpoint @ {step_no}")
+
+    spec = TrainJobSpec(job_id=f"train-{cfg.name}",
+                        n_steps=args.steps - start_step,
+                        chunk=args.chunk,
+                        ckpt_every=args.ckpt_every if args.ckpt_dir else 0)
+
+    def chunk_with_offset(sh, a, b):
+        return run_chunk(sh, a + start_step, b + start_step)
+
+    def ckpt_with_offset(sh, s):
+        return run_ckpt(sh, s + start_step)
+
+    dag = build_training_workflow(
+        spec, chunk_with_offset, shared,
+        run_ckpt=ckpt_with_offset if args.ckpt_dir else None)
+    rt = LocalRuntime(n_nodes=1, strategy=args.strategy)
+    rt.run(dag, timeout_s=6000)
+    losses = [m["loss"] for m in shared.metrics if "loss" in m]
+    print(f"[train] done: first-chunk loss {losses[0]:.3f} → "
+          f"last-chunk loss {losses[-1]:.3f}")
+    rt.shutdown()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+# Model substrate: pure-JAX pytree models for all assigned families.
+from .layers import count_params, init_params, param_axes, param_specs  # noqa: F401
+from .model import Model, build_model  # noqa: F401

@@ -1,0 +1,177 @@
+"""Zamba2-style hybrid stack: Mamba2 backbone + one *shared* attention block.
+
+The shared block's weights are applied every ``attn_every`` layers — the same
+parameters each time (Zamba2's parameter-sharing trick). The scan therefore
+runs over groups of ``attn_every`` Mamba layers; the shared attention params
+are closed over (constants to the scan body), while each application keeps
+its own KV cache (activations differ even though weights are shared).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .layers import (
+    P,
+    Schema,
+    apply_rope,
+    attention,
+    attention_schema,
+    mlp_schema,
+    qkv_project,
+    rmsnorm,
+    stack_schema,
+    swiglu,
+)
+from .mamba2 import (
+    mamba_block,
+    mamba_cache_shape,
+    mamba_decode_step,
+    mamba_schema,
+)
+from .transformer import unembed
+
+
+def hybrid_groups(cfg: ModelConfig) -> Tuple[int, int]:
+    assert cfg.hybrid is not None
+    k = cfg.hybrid.attn_every
+    assert cfg.n_layers % k == 0, (cfg.n_layers, k)
+    return cfg.n_layers // k, k
+
+
+def hybrid_schema(cfg: ModelConfig) -> Schema:
+    g, k = hybrid_groups(cfg)
+    mamba = stack_schema(stack_schema(
+        {"ln": P((cfg.d_model,), ("embed",), "ones"), **mamba_schema(cfg)},
+        k, "pattern"), g, "layers")
+    s: Schema = {
+        "embed": {"table": P((cfg.vocab, cfg.d_model), ("vocab", "embed"))},
+        "mamba": mamba,
+        "final_norm": P((cfg.d_model,), ("embed",), "ones"),
+        "lm_head": P((cfg.d_model, cfg.vocab), ("embed", "vocab")),
+    }
+    if cfg.hybrid.shared_attn:
+        s["shared"] = {
+            "ln1": P((cfg.d_model,), ("embed",), "ones"),
+            "attn": attention_schema(cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                     cfg.head_dim_, cfg.qkv_bias),
+            "ln2": P((cfg.d_model,), ("embed",), "ones"),
+            "ffn": mlp_schema(cfg.d_model, cfg.d_ff),
+        }
+    return s
+
+
+def _shared_attn_block(cfg: ModelConfig, p: Dict[str, Any], x: jax.Array,
+                       positions: jax.Array) -> jax.Array:
+    h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    q, k, v = qkv_project(h, p["attn"], cfg.n_heads, cfg.n_kv_heads,
+                          cfg.head_dim_)
+    q = apply_rope(q, positions, fraction=cfg.rope_fraction, theta=cfg.rope_theta)
+    k = apply_rope(k, positions, fraction=cfg.rope_fraction, theta=cfg.rope_theta)
+    o = attention(q, k, v, causal=True)
+    B, S = x.shape[:2]
+    x = x + jnp.einsum("bsh,hd->bsd", o.reshape(B, S, -1), p["attn"]["wo"])
+    h = rmsnorm(x, p["ln2"], cfg.norm_eps)
+    return x + swiglu(h, p["ffn"]["w_gate"], p["ffn"]["w_up"], p["ffn"]["w_down"])
+
+
+def forward(cfg: ModelConfig, params: Dict[str, Any], tokens: jax.Array,
+            remat: str = "block", use_pallas: bool = False,
+            ) -> Tuple[jax.Array, jax.Array]:
+    x = params["embed"]["table"][tokens]
+    B, S, _ = x.shape
+    positions = jnp.arange(S)[None, :]
+    g, k = hybrid_groups(cfg)
+    shared = params.get("shared")
+
+    def group_body(h, gp):
+        from .transformer import maybe_seq_shard
+        h = maybe_seq_shard(h)
+        for i in range(k):
+            pi = jax.tree.map(lambda a: a[i], gp)
+            h = h + mamba_block(rmsnorm(h, pi["ln"], cfg.norm_eps),
+                                pi, cfg, use_pallas)
+        if shared is not None:
+            h = _shared_attn_block(cfg, shared, h, positions)
+        return maybe_seq_shard(h), None
+
+    if remat != "none":
+        group_body = jax.checkpoint(
+            group_body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(group_body, x, params["mamba"])
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return unembed(cfg, params, x), jnp.zeros((), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+def cache_shapes(cfg: ModelConfig, batch: int, max_len: int) -> Dict[str, Any]:
+    g, k = hybrid_groups(cfg)
+    ms = mamba_cache_shape(cfg, batch)
+    shapes: Dict[str, Any] = {
+        "conv": (g, k, *ms["conv"]),
+        "ssm": (g, k, *ms["ssm"]),
+    }
+    if cfg.hybrid is not None and cfg.hybrid.shared_attn:
+        shapes["attn_k"] = (g, batch, max_len, cfg.n_kv_heads, cfg.head_dim_)
+        shapes["attn_v"] = (g, batch, max_len, cfg.n_kv_heads, cfg.head_dim_)
+    return shapes
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> Dict[str, Any]:
+    return {k: jnp.zeros(s, dtype) for k, s in
+            cache_shapes(cfg, batch, max_len).items()}
+
+
+def decode_step(cfg: ModelConfig, params: Dict[str, Any],
+                cache: Dict[str, Any], token: jax.Array, pos: jax.Array,
+                ) -> Tuple[jax.Array, Dict[str, Any]]:
+    x = params["embed"]["table"][token]                      # (B, d)
+    positions = jnp.full((1, 1), pos, jnp.int32)
+    g, kk = hybrid_groups(cfg)
+    shared = params.get("shared")
+
+    def scan_body(h, inp):
+        gp, cache_g = inp
+        new_conv, new_ssm = [], []
+        for i in range(kk):
+            pi = jax.tree.map(lambda a: a[i], gp)
+            st = {"conv": cache_g["conv"][i], "ssm": cache_g["ssm"][i]}
+            y, st2 = mamba_decode_step(
+                rmsnorm(h, pi["ln"], cfg.norm_eps), st, pi, cfg)
+            h = h + y
+            new_conv.append(st2["conv"])
+            new_ssm.append(st2["ssm"])
+        out = {"conv": jnp.stack(new_conv), "ssm": jnp.stack(new_ssm)}
+        if shared is not None:
+            hh = rmsnorm(h[:, None, :], shared["ln1"], cfg.norm_eps)
+            q, k, v = qkv_project(hh, shared["attn"], cfg.n_heads,
+                                  cfg.n_kv_heads, cfg.head_dim_)
+            q = apply_rope(q, positions, fraction=cfg.rope_fraction,
+                           theta=cfg.rope_theta)
+            k = apply_rope(k, positions, fraction=cfg.rope_fraction,
+                           theta=cfg.rope_theta)
+            k_all = jax.lax.dynamic_update_slice(
+                cache_g["attn_k"], k, (0, pos, 0, 0))
+            v_all = jax.lax.dynamic_update_slice(
+                cache_g["attn_v"], v, (0, pos, 0, 0))
+            o = attention(q, k_all, v_all, causal=False, kv_len=pos + 1)
+            B = h.shape[0]
+            h = h + jnp.einsum("bh,hd->bd", o.reshape(B, -1),
+                               shared["attn"]["wo"])
+            hh = rmsnorm(h, shared["ln2"], cfg.norm_eps)
+            h = h + swiglu(hh[:, None, :], shared["ffn"]["w_gate"],
+                           shared["ffn"]["w_up"], shared["ffn"]["w_down"])[:, 0]
+            out["attn_k"] = k_all
+            out["attn_v"] = v_all
+        return h, out
+
+    x, new_cache = jax.lax.scan(scan_body, x, (params["mamba"], cache))
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bd,dv->bv", x, params["lm_head"])
+    return logits, new_cache

@@ -1,0 +1,196 @@
+"""Serving runtime: decode/prefill step factories + continuous batching.
+
+``make_serve_step`` produces the pure step the decode dry-run cells lower
+(one new token against a seq_len KV cache, greedy head). ``ContinuousBatcher``
+is the real serving loop used by the examples: a slot-based batcher whose
+admission queue is managed through the CWS (each admitted request is a CWSI
+task, so serving inherits workflow-aware ordering, provenance, and the
+runtime predictor for SLA estimates).
+"""
+from __future__ import annotations
+
+import itertools
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from ..configs.base import ShapeConfig
+from ..models.model import Model
+from .sharding import decode_rules, input_axes, shardings_for_tree, train_rules
+
+
+def make_serve_step(model: Model, shape: ShapeConfig, mesh: Mesh,
+                    multi_pod: bool = False):
+    """Returns (serve_step, arg_shardings dict, input_specs)."""
+    long_ctx = shape.seq_len > 100_000
+    n_exp = model.cfg.moe.n_experts if model.cfg.moe else 0
+    use_ep = model.cfg.family == "moe" and n_exp >= 64
+    rules = decode_rules(multi_pod, long_ctx, model.cfg.family, n_exp)
+    specs = model.input_specs(shape)
+    ax = input_axes(model.cfg, "decode")
+    arg_sh = shardings_for_tree(specs, ax, rules, mesh)
+
+    p_specs = model.param_specs()
+    param_sh = shardings_for_tree(p_specs, model.param_axes(), rules, mesh)
+
+    from ..models.moe import ep_mode
+
+    def serve_step(params, cache, token, pos):
+        import contextlib
+        ctx = ep_mode() if use_ep else contextlib.nullcontext()
+        with ctx:
+            logits, new_cache = model.decode_step(params, cache, token, pos)
+        next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_token, new_cache
+
+    shardings = {"params": param_sh, **arg_sh}
+    return serve_step, shardings, {"params": p_specs, **specs}
+
+
+def make_prefill_step(model: Model, shape: ShapeConfig, mesh: Mesh,
+                      multi_pod: bool = False):
+    # prefill keeps train-style (non-EP) rules: measured — EP routing of
+    # 1M prefill tokens costs more collective than the 2-D weight sharding
+    rules = train_rules(multi_pod, model.cfg.family)
+    specs = model.input_specs(shape)
+    ax = input_axes(model.cfg, "prefill")
+    arg_sh = shardings_for_tree(specs, ax, rules, mesh)
+    p_specs = model.param_specs()
+    param_sh = shardings_for_tree(p_specs, model.param_axes(), rules, mesh)
+
+    def prefill_step(args):
+        params = args["params"]
+        inputs = {k: v for k, v in args.items() if k != "params"}
+        return _prefill_inner(params, inputs)
+
+    def _prefill_inner(params, inputs):
+        # enc-dec and SSM families "prefill" by running the forward pass
+        # (their serving state is built by the decode path / cross-KV fn);
+        # attention families build the KV cache.
+        if model.cfg.family in ("dense", "moe", "vlm"):
+            extra = {k: v for k, v in inputs.items() if k != "tokens"}
+            max_len = shape.seq_len
+            if model.cfg.family == "vlm" and model.cfg.vision is not None:
+                max_len += model.cfg.vision.n_patches
+            logits, cache = model.prefill(params, inputs["tokens"],
+                                          max_len, extra or None)
+            return jnp.argmax(logits, -1).astype(jnp.int32), cache
+        logits, aux = model.logits(params, {**inputs,
+                                            "labels": inputs.get("tokens")},
+                                   remat="none")
+        return jnp.argmax(logits[:, -1, :], -1).astype(jnp.int32), aux
+
+    return prefill_step, {"params": param_sh, **arg_sh}, \
+        {"params": p_specs, **specs}
+
+
+# ---------------------------------------------------------------------------
+# continuous batching (real serving loop for the examples)
+# ---------------------------------------------------------------------------
+@dataclass
+class Request:
+    req_id: str
+    prompt: List[int]
+    max_new_tokens: int = 32
+    submitted_at: float = 0.0
+    tokens_out: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+class ContinuousBatcher:
+    """Slot-based continuous batching over a fixed decode batch.
+
+    Slots hold independent requests; each engine step decodes one token for
+    every active slot. Finished slots are refilled from the admission queue
+    between steps (the queue order is whatever the CWS hands us — e.g.
+    shortest-predicted-first under the Lotaru plugin).
+    """
+
+    def __init__(self, model: Model, params: Any, batch_slots: int,
+                 max_len: int, eos_token: int = 2) -> None:
+        self.model = model
+        self.params = params
+        self.slots: List[Optional[Request]] = [None] * batch_slots
+        self.max_len = max_len
+        self.eos = eos_token
+        self.cache = model.init_cache(batch_slots, max_len)
+        self.pos = np.zeros(batch_slots, np.int32)   # per-slot lengths
+        self.queue: List[Request] = []
+        self._step = jax.jit(model.decode_step)
+        self.steps = 0
+        # find each cache tensor's batch dim by diffing two spec batch sizes
+        a = jax.tree.leaves(model.cache_specs(batch_slots, max_len))
+        b = jax.tree.leaves(model.cache_specs(batch_slots + 1, max_len))
+        self._batch_dims = [
+            next(i for i, (x, y) in enumerate(zip(sa.shape, sb.shape))
+                 if x != y)
+            for sa, sb in zip(a, b)
+        ]
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        for i, slot in enumerate(self.slots):
+            if slot is None and self.queue:
+                req = self.queue.pop(0)
+                self.slots[i] = req
+                # feed the prompt token-by-token (teacher-forced prefill)
+                for t in req.prompt[:-1]:
+                    self._advance(i, t, sample=False)
+                self._last_token = req.prompt[-1]
+                self._pending_first = i
+
+    def _advance(self, slot: int, token: int, sample: bool) -> Optional[int]:
+        tok = jnp.zeros(len(self.slots), jnp.int32).at[slot].set(token)
+        logits, self.cache = self._step(self.params, self.cache, tok,
+                                        jnp.int32(int(self.pos[slot])))
+        self.pos[slot] += 1
+        self.steps += 1
+        if sample:
+            return int(jnp.argmax(logits[slot]))
+        return None
+
+    def step(self) -> int:
+        """One engine round: admit, decode one token per active slot."""
+        self._admit()
+        active = 0
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            active += 1
+            last = req.tokens_out[-1] if req.tokens_out else req.prompt[-1]
+            nxt = self._advance(i, last, sample=True)
+            req.tokens_out.append(nxt)
+            if (nxt == self.eos or len(req.tokens_out) >= req.max_new_tokens
+                    or self.pos[i] >= self.max_len - 1):
+                req.done = True
+                self.slots[i] = None
+                self.pos[i] = 0
+                self._reset_slot(i)   # fresh request needs a clean KV range
+        return active
+
+    def _reset_slot(self, slot: int) -> None:
+        leaves, treedef = jax.tree.flatten(self.cache)
+        out = []
+        for c, d in zip(leaves, self._batch_dims):
+            idx = tuple(slot if i == d else slice(None)
+                        for i in range(c.ndim))
+            out.append(c.at[idx].set(0))
+        self.cache = jax.tree.unflatten(treedef, out)
+
+    def drain(self, max_rounds: int = 10_000) -> None:
+        rounds = 0
+        while (self.queue or any(s is not None for s in self.slots)):
+            if self.step() == 0 and not self.queue:
+                break
+            rounds += 1
+            if rounds > max_rounds:
+                raise RuntimeError("batcher did not drain")
+
+

@@ -1,0 +1,105 @@
+"""Property-based tests (hypothesis) on the scheduler's invariants.
+
+For random DAGs, random heterogeneous clusters, and every strategy:
+  * every workflow terminates with all tasks SUCCEEDED (no livelock),
+  * no task starts before all its parents finished,
+  * node memory/cpu capacity is never exceeded at any event time,
+  * the makespan is at least the critical-path lower bound.
+"""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.cluster import ClusterSimulator, SimConfig
+from repro.cluster.nodes import cpu_node
+from repro.core import (
+    CommonWorkflowScheduler,
+    DataRef,
+    Resources,
+    TaskSpec,
+    WorkflowDAG,
+)
+from repro.core.strategies import STRATEGIES
+
+GiB = 1 << 30
+
+
+@st.composite
+def random_dag(draw):
+    n = draw(st.integers(4, 24))
+    dag = WorkflowDAG("prop", "prop")
+    rng = np.random.default_rng(draw(st.integers(0, 2 ** 31)))
+    ids = []
+    for i in range(n):
+        runtime = float(rng.uniform(1, 40))
+        mem = int(rng.uniform(0.5, 4.0) * GiB)
+        spec = TaskSpec(
+            task_id=f"t{i}", name=f"kind{i % 5}",
+            inputs=(DataRef(f"d{i}", int(rng.uniform(0, 2) * GiB)),),
+            resources=Resources(cpus=float(rng.choice([1, 2, 4])),
+                                mem_bytes=mem),
+            base_runtime_s=runtime,
+            params={"sim": {"peak_mem": mem // 2}},
+        )
+        # parents drawn only from earlier tasks → acyclic by construction
+        k = draw(st.integers(0, min(3, i)))
+        deps = list(rng.choice(ids, size=k, replace=False)) if k else []
+        dag.add_task(spec, deps=deps)
+        ids.append(spec.task_id)
+    return dag
+
+
+@settings(max_examples=12, deadline=None)
+@given(dag=random_dag(),
+       strategy=st.sampled_from(sorted(STRATEGIES)),
+       n_nodes=st.integers(2, 5))
+def test_invariants(dag, strategy, n_nodes):
+    nodes = [cpu_node(f"n{i}", cpus=8, mem_gib=16,
+                      speed_factor=1.0 + 0.1 * i) for i in range(n_nodes)]
+    sim = ClusterSimulator(nodes, SimConfig(seed=0))
+    cws = CommonWorkflowScheduler(adapter=sim, strategy=strategy)
+    sim.attach(cws)
+    sim.submit_workflow_at(0.0, dag)
+    sim.run()
+
+    # termination
+    assert dag.succeeded(), {t.task_id: t.state for t in dag.tasks.values()}
+
+    # dependency ordering
+    for tid, task in dag.tasks.items():
+        for p in dag.parents[tid]:
+            assert dag.tasks[p].end_time <= task.start_time + 1e-9
+
+    # capacity: replay the schedule and check per-node usage at every start
+    events = []
+    for tr in cws.provenance.task_traces:
+        if tr.state != "SUCCEEDED" or tr.node is None:
+            continue
+        events.append((tr.start_time, tr.requested_mem_bytes, 1, tr.node,
+                       tr.task_id))
+        events.append((tr.end_time, tr.requested_mem_bytes, -1, tr.node,
+                       tr.task_id))
+    events.sort(key=lambda e: (e[0], e[2]))   # frees before allocs at ties
+    usage = {n.name: 0 for n in nodes}
+    cap = {n.name: n.mem_bytes for n in nodes}
+    for t, mem, sign, node, tid in events:
+        usage[node] += sign * mem
+        assert usage[node] <= cap[node] + 1, (node, tid, usage[node])
+
+    # makespan lower bound: weighted critical path at the fastest speed
+    w = {tid: dag.tasks[tid].spec.base_runtime_s for tid in dag.tasks}
+    cp = max(dag.ranks(w).values())
+    fastest = max(n.speed_factor for n in nodes)
+    # simulator adds noise (sigma 0.08) and staging latency; allow 3 sigma
+    assert cws.provenance.makespan("prop") >= (cp / fastest) * 0.7
+
+
+@settings(max_examples=10, deadline=None)
+@given(dag=random_dag())
+def test_serialisation_roundtrip(dag):
+    js = dag.to_json()
+    back = WorkflowDAG.from_json(js)
+    assert set(back.tasks) == set(dag.tasks)
+    for tid in dag.tasks:
+        assert back.parents[tid] == dag.parents[tid]
+        assert back.tasks[tid].spec.resources == dag.tasks[tid].spec.resources
+    assert back.ranks() == dag.ranks()
