@@ -1,0 +1,19 @@
+# Tier-1 verification and benchmarks for the CWS/CWSI reproduction.
+#
+#   make test        the tier-1 suite (ROADMAP.md "Tier-1 verify")
+#   make bench       scheduling-overhead scale benchmark (old vs new engine)
+#   make bench-all   every paper-artifact benchmark (benchmarks/run.py)
+
+PYTHON ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test bench bench-all
+
+test:
+	$(PYTHON) -m pytest -x -q
+
+bench:
+	$(PYTHON) benchmarks/bench_sched_scale.py
+
+bench-all:
+	$(PYTHON) -m benchmarks.run

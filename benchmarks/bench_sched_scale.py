@@ -1,0 +1,125 @@
+"""Scheduling-overhead at scale: incremental core vs legacy full scans.
+
+The paper's premise only holds if scheduler overhead stays negligible next
+to task runtimes. This bench stresses exactly the regime where the seed
+engine degraded: many concurrent workflows with many tasks. It runs the
+same seeded sweep twice — once with the incremental ready-queue engine
+(the live path) and once with ``legacy_scan=True`` (the pre-refactor
+O(all-tasks)-per-round behaviour) — and reports:
+
+  * µs spent inside ``schedule()`` per scheduling round,
+  * readiness + rank operation counts (``CommonWorkflowScheduler.op_counts``),
+  * the reduction ratio (claim: ≥5× fewer ops at the 10×500-task scale).
+
+Makespans must be bit-identical between the two engines — the refactor
+changes the cost of decisions, never the decisions.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Dict, List, Tuple
+
+from repro.cluster import (
+    ClusterSimulator,
+    SimConfig,
+    build_workflow,
+    heterogeneous_cluster,
+)
+from repro.core import CommonWorkflowScheduler, LotaruPredictor
+
+# 10 concurrent workflows x ~500 tasks each (rnaseq: 7 per-sample stages +
+# 1 merge -> 7*71+1 = 498 tasks)
+N_WORKFLOWS = 10
+N_SAMPLES = 71
+N_NODES = 16
+
+# secondary sweep sized so the legacy per-ready-task HEFT rank recompute
+# finishes in reasonable wall time
+HEFT_WORKFLOWS = 4
+HEFT_SAMPLES = 17
+
+
+def _sweep(strategy: str, legacy: bool, n_workflows: int,
+           n_samples: int) -> Dict[str, Any]:
+    sim = ClusterSimulator(heterogeneous_cluster(N_NODES), SimConfig(seed=9))
+    cws = CommonWorkflowScheduler(
+        adapter=sim, strategy=strategy, predictor=LotaruPredictor(),
+        legacy_scan=legacy)
+    if legacy and hasattr(cws.strategy, "_memo_enabled"):
+        cws.strategy._memo_enabled = False   # pre-refactor HEFT cost model
+    sim.attach(cws)
+
+    sched_time = [0.0]
+    inner = cws.schedule
+
+    def timed_schedule(now: float) -> int:
+        t0 = time.perf_counter()
+        n = inner(now)
+        sched_time[0] += time.perf_counter() - t0
+        return n
+
+    cws.schedule = timed_schedule
+
+    dags = []
+    for i in range(n_workflows):
+        dag = build_workflow("rnaseq", seed=100 + i,
+                             workflow_id=f"wf-{i}", n_samples=n_samples)
+        dags.append(dag)
+        sim.submit_workflow_at(30.0 * i, dag)
+    t0 = time.perf_counter()
+    sim.run()
+    wall = time.perf_counter() - t0
+    assert all(d.succeeded() for d in dags)
+    counts = cws.op_counts()
+    return {
+        "makespans": [cws.provenance.makespan(d.workflow_id) for d in dags],
+        "tasks": sum(len(d) for d in dags),
+        "rounds": counts["rounds"],
+        "ops": counts["readiness_ops"] + counts["rank_ops"],
+        "readiness_ops": counts["readiness_ops"],
+        "rank_ops": counts["rank_ops"],
+        "sched_s": sched_time[0],
+        "us_per_round": 1e6 * sched_time[0] / max(counts["rounds"], 1),
+        "wall_s": wall,
+    }
+
+
+def _compare(strategy: str, n_workflows: int, n_samples: int,
+             verbose: bool) -> Tuple[float, float]:
+    new = _sweep(strategy, legacy=False, n_workflows=n_workflows,
+                 n_samples=n_samples)
+    old = _sweep(strategy, legacy=True, n_workflows=n_workflows,
+                 n_samples=n_samples)
+    assert new["makespans"] == old["makespans"], (
+        f"{strategy}: incremental engine changed scheduling decisions")
+    op_ratio = old["ops"] / max(new["ops"], 1)
+    us_ratio = old["us_per_round"] / max(new["us_per_round"], 1e-9)
+    if verbose:
+        print(f"  {strategy:12s} {n_workflows}x{new['tasks']//n_workflows}-task "
+              f"workflows, {new['rounds']} rounds")
+        print(f"    ops      old {old['ops']:>12,}  new {new['ops']:>12,}  "
+              f"({op_ratio:.1f}x fewer)")
+        print(f"    us/round old {old['us_per_round']:>12,.0f}  "
+              f"new {new['us_per_round']:>12,.0f}  ({us_ratio:.1f}x faster)")
+        print(f"    makespans identical: True")
+    return op_ratio, us_ratio
+
+
+def run(verbose: bool = True) -> Tuple[float, Dict[str, float]]:
+    t0 = time.time()
+    rank_ops, rank_us = _compare("rank_min_rr", N_WORKFLOWS, N_SAMPLES, verbose)
+    heft_ops, heft_us = _compare("heft", HEFT_WORKFLOWS, HEFT_SAMPLES, verbose)
+    out = {
+        "rank_min_rr_op_reduction_x": rank_ops,
+        "rank_min_rr_us_per_round_speedup_x": rank_us,
+        "heft_op_reduction_x": heft_ops,
+        "heft_us_per_round_speedup_x": heft_us,
+    }
+    # the tentpole claim: >=5x fewer rank/readiness computations at scale
+    assert rank_ops >= 5.0, f"op reduction only {rank_ops:.1f}x"
+    assert heft_ops >= 5.0, f"HEFT op reduction only {heft_ops:.1f}x"
+    return time.time() - t0, out
+
+
+if __name__ == "__main__":
+    run(verbose=True)

@@ -7,6 +7,8 @@
   resource_pred  §5 peak-memory prediction (wastage/OOM table)
   provenance     §4 provenance store throughput/export
   roofline       §Roofline table from the dry-run artifacts (if present)
+  sched_scale    incremental scheduling core vs legacy full scans at
+                 10×500-task multi-workflow scale
 
 Each bench returns (elapsed_s, derived-metrics dict) and the harness prints
 one ``name,us_per_call,derived`` CSV line per bench.
@@ -24,6 +26,7 @@ def main() -> None:
         bench_provenance,
         bench_resource_pred,
         bench_roofline,
+        bench_sched_scale,
         bench_strategies,
     )
 
@@ -34,6 +37,7 @@ def main() -> None:
         ("resource_pred", bench_resource_pred.run),
         ("provenance", bench_provenance.run),
         ("roofline", bench_roofline.run),
+        ("sched_scale", bench_sched_scale.run),
     ]
     rows = []
     failed = []

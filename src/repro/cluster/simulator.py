@@ -64,6 +64,9 @@ class ClusterSimulator:
         self._gen = itertools.count(1)
         self._node_of_launch: Dict[int, str] = {}
         self._task_of_launch: Dict[int, Task] = {}
+        # node -> unretired launch generations; NODE_FAIL consults only
+        # this (not every launch in history)
+        self._gens_on_node: Dict[str, set] = {}
         self.launches = 0
         self.kills = 0
 
@@ -83,6 +86,7 @@ class ClusterSimulator:
         self._launch_gen[task.task_id] = gen
         self._node_of_launch[gen] = node
         self._task_of_launch[gen] = task
+        self._gens_on_node.setdefault(node, set()).add(gen)
         self.launches += 1
 
         sim = task.spec.params.get("sim", {})
@@ -129,8 +133,21 @@ class ClusterSimulator:
         })
 
     def kill(self, task_id: str) -> None:
-        self._launch_gen.pop(task_id, None)   # invalidate in-flight events
+        gen = self._launch_gen.pop(task_id, None)   # invalidate in-flight events
+        if gen is not None:
+            self._retire(gen)
         self.kills += 1
+
+    def _retire(self, gen: int) -> None:
+        """Drop a launch's bookkeeping once it can never go live again."""
+        node = self._node_of_launch.pop(gen, None)
+        self._task_of_launch.pop(gen, None)
+        if node is not None:
+            gens = self._gens_on_node.get(node)
+            if gens is not None:
+                gens.discard(gen)
+                if not gens:
+                    del self._gens_on_node[node]
 
     # ------------------------------------------------------------------
     # fault & elasticity injection (schedule before run())
@@ -182,15 +199,18 @@ class ClusterSimulator:
                 if task is not None:
                     self._launch_gen.pop(task.task_id, None)
                     cws.on_task_finished(task.task_id, self.now, ev.payload["result"])
+                self._retire(gen)
 
             elif ev.kind == "NODE_FAIL":
                 node = ev.payload["node"]
-                # drop in-flight events of tasks on that node
-                for gen, nname in list(self._node_of_launch.items()):
+                # drop in-flight events of launches on that node (only the
+                # node's unretired generations — not every launch ever made)
+                for gen in list(self._gens_on_node.get(node, ())):
                     task = self._task_of_launch.get(gen)
-                    if nname == node and task is not None \
+                    if task is not None \
                             and self._launch_gen.get(task.task_id) == gen:
                         self._launch_gen.pop(task.task_id, None)
+                    self._retire(gen)
                 cws.remove_node(node, self.now)
 
             elif ev.kind == "NODE_JOIN":

@@ -30,7 +30,6 @@ from typing import Any, Dict, List, Optional, Tuple
 
 from .dag import TaskSpec, TaskState
 from .scheduler import CommonWorkflowScheduler
-from .strategies import make_strategy
 
 CWSI_VERSION = "v1"
 
@@ -84,15 +83,17 @@ class CWSIServer:
         if not parts or parts[0] != CWSI_VERSION:
             raise CWSIError(400, f"unsupported CWSI version in path {req.path!r}")
         parts = parts[1:]
-        m = (req.method.upper(), tuple(parts))
+        # HTTP methods are case-insensitive on the wire: normalise once so
+        # lowercase clients don't silently 404
+        method = req.method.upper()
 
-        if req.method == "POST" and parts[:1] == ["workflow"] and len(parts) == 2:
+        if method == "POST" and parts[:1] == ["workflow"] and len(parts) == 2:
             wid = parts[1]
             meta = req.body or {}
             self.scheduler.register_workflow(wid, meta.get("name", wid), meta)
             return 200, {"workflowId": wid}
 
-        if (req.method == "POST" and len(parts) == 3
+        if (method == "POST" and len(parts) == 3
                 and parts[0] == "workflow" and parts[2] == "task"):
             wid = parts[1]
             body = req.body or {}
@@ -103,13 +104,13 @@ class CWSIServer:
             self.scheduler.schedule(self.clock)
             return 200, {"taskId": task.task_id, "state": task.state.value}
 
-        if (req.method == "GET" and len(parts) == 5
+        if (method == "GET" and len(parts) == 5
                 and parts[0] == "workflow" and parts[2] == "task"
                 and parts[4] == "state"):
             st = self.scheduler.task_state(parts[1], parts[3])
             return 200, {"state": st.value}
 
-        if (req.method == "GET" and len(parts) == 3
+        if (method == "GET" and len(parts) == 3
                 and parts[0] == "workflow" and parts[2] == "state"):
             dag = self.scheduler.dags[parts[1]]
             return 200, {
@@ -118,13 +119,17 @@ class CWSIServer:
                 "tasks": {tid: t.state.value for tid, t in dag.tasks.items()},
             }
 
-        if (req.method == "PUT" and len(parts) == 3
+        if (method == "PUT" and len(parts) == 3
                 and parts[0] == "workflow" and parts[2] == "strategy"):
+            wid = parts[1]
             name = (req.body or {}).get("strategy", "")
-            self.scheduler.strategy = make_strategy(name)
-            return 200, {"strategy": name}
+            # scoped to this workflow only — does NOT mutate the global
+            # strategy other workflows are scheduled with
+            self.scheduler.set_workflow_strategy(wid, name)
+            return 200, {"workflowId": wid, "strategy": name}
 
-        if req.method == "GET" and parts[:2] == ["provenance", "task"]:
+        if (method == "GET" and len(parts) == 3
+                and parts[:2] == ["provenance", "task"]):
             traces = self.scheduler.provenance.traces_for_name(parts[2])
             return 200, {"traces": [
                 {
@@ -134,7 +139,8 @@ class CWSIServer:
                 } for t in traces
             ]}
 
-        if req.method == "GET" and parts[:2] == ["provenance", "workflow"]:
+        if (method == "GET" and len(parts) == 3
+                and parts[:2] == ["provenance", "workflow"]):
             wid = parts[2]
             return 200, {
                 "makespan": self.scheduler.provenance.makespan(wid),
@@ -142,7 +148,7 @@ class CWSIServer:
                 "traces": len(self.scheduler.provenance.traces_for_workflow(wid)),
             }
 
-        if req.method == "GET" and parts == ["predict", "runtime"]:
+        if method == "GET" and parts == ["predict", "runtime"]:
             body = req.body or {}
             if self.scheduler.predictor is None:
                 raise CWSIError(501, "no runtime predictor installed")
@@ -151,7 +157,7 @@ class CWSIServer:
             )
             return 200, {"runtimeSeconds": mu, "stdSeconds": std}
 
-        if req.method == "GET" and parts == ["metrics", "nodes"]:
+        if method == "GET" and parts == ["metrics", "nodes"]:
             return 200, {"utilisation": self.scheduler.provenance.node_utilisation()}
 
         raise CWSIError(404, f"no route for {req.method} {req.path}")

@@ -184,17 +184,43 @@ class WorkflowDAG:
         self.children: Dict[str, Set[str]] = defaultdict(set)
         self.parents: Dict[str, Set[str]] = defaultdict(set)
         self._rank_cache: Optional[Dict[str, float]] = None
+        # --- incremental scheduling state ---
+        # unmet dependency count: number of parents not yet SUCCEEDED
+        self._unmet: Dict[str, int] = {}
+        # PENDING tasks whose unmet count hit 0 but are not READY-stamped yet
+        # (dict used as an insertion-ordered set)
+        self._runnable: Dict[str, None] = {}
+        # structure/data version, bumped on every mutation — memo key for
+        # strategies caching derived quantities (e.g. HEFT weighted ranks)
+        self.version: int = 0
+        # op counters (read by benchmarks/bench_sched_scale.py)
+        self.readiness_ops: int = 0   # task/parent entries examined for readiness
+        self.rank_ops: int = 0        # nodes visited computing/patching ranks
 
     # ---------------- construction ----------------
     def add_task(self, spec: TaskSpec, deps: Iterable[str] = ()) -> Task:
         if spec.task_id in self.tasks:
             raise ValueError(f"duplicate task id {spec.task_id!r}")
+        deps = tuple(deps)
+        # validate before inserting: a failed submit must not leave a
+        # half-added task behind (it would run without its dependencies)
+        for d in deps:
+            if d == spec.task_id:
+                raise CycleError(f"self-dependency on {d!r}")
+            if d not in self.tasks:
+                raise KeyError(f"unknown parent task {d!r}")
         spec.workflow_id = self.workflow_id
         task = Task(spec=spec)
         self.tasks[spec.task_id] = task
+        self._unmet[spec.task_id] = 0
+        self._runnable[spec.task_id] = None
+        if self._rank_cache is not None:
+            # a fresh task has no children: unit rank 1
+            self._rank_cache[spec.task_id] = 1.0
+            self.rank_ops += 1
         for d in deps:
             self.add_dep(d, spec.task_id)
-        self._rank_cache = None
+        self.version += 1
         return task
 
     def add_dep(self, parent: str, child: str) -> None:
@@ -204,9 +230,43 @@ class WorkflowDAG:
             raise KeyError(f"unknown child task {child!r}")
         if parent == child:
             raise CycleError(f"self-dependency on {parent!r}")
+        if child in self.children[parent]:
+            return                      # duplicate edge: idempotent
         self.children[parent].add(child)
         self.parents[child].add(parent)
-        self._rank_cache = None
+        if self.tasks[parent].state != TaskState.SUCCEEDED:
+            self._unmet[child] = self._unmet.get(child, 0) + 1
+            if self.tasks[child].state == TaskState.PENDING:
+                self._runnable.pop(child, None)
+        self._patch_rank(parent, child)
+        self.version += 1
+
+    def _patch_rank(self, parent: str, child: str) -> None:
+        """Patch the cached unit ranks for a new edge parent→child.
+
+        The edge can only raise ranks of ``parent`` and its ancestors
+        (rank = 1 + max over children). If relaxation ever reaches
+        ``child`` again the edge closed a cycle: drop the cache and let
+        ``validate()`` report it, as the full recompute would.
+        """
+        r = self._rank_cache
+        if r is None:
+            return
+        if r[child] + 1.0 <= r[parent]:
+            return
+        r[parent] = r[child] + 1.0
+        self.rank_ops += 1
+        frontier = deque([parent])
+        while frontier:
+            node = frontier.popleft()
+            for p in self.parents[node]:
+                self.rank_ops += 1
+                if r[node] + 1.0 > r[p]:
+                    if p == child:
+                        self._rank_cache = None   # cycle: defer to validate()
+                        return
+                    r[p] = r[node] + 1.0
+                    frontier.append(p)
 
     # ---------------- queries ----------------
     def __len__(self) -> int:
@@ -243,6 +303,7 @@ class WorkflowDAG:
         self.topological_order()
 
     def deps_satisfied(self, task_id: str) -> bool:
+        self.readiness_ops += len(self.parents[task_id])
         return all(
             self.tasks[p].state == TaskState.SUCCEEDED for p in self.parents[task_id]
         )
@@ -252,15 +313,66 @@ class WorkflowDAG:
 
         ``now`` stamps ``ready_time`` — the FIFO key (a real SWMS submits a
         task when it becomes runnable, so queue order is readiness order).
+
+        This is the pre-incremental full scan — O(V+E) per call. The engine
+        only uses it in ``legacy_scan`` mode (benchmark baseline /
+        determinism checks); the live path is ``promote_runnable`` +
+        ``on_task_succeeded``.
         """
         out = []
         for tid, task in self.tasks.items():
+            self.readiness_ops += 1
             if task.state == TaskState.PENDING and self.deps_satisfied(tid):
                 task.state = TaskState.READY
                 task.ready_time = now
+                self._runnable.pop(tid, None)
             if task.state == TaskState.READY:
                 out.append(task)
         return out
+
+    # ---------------- incremental readiness ----------------
+    def promote_runnable(self, now: float) -> List[Task]:
+        """Stamp runnable PENDING tasks READY; return the newly promoted.
+
+        O(newly runnable) — the counterpart of the ``ready_tasks`` full
+        scan. Promotion timing matches the scan exactly: a task becomes
+        runnable only when its last unmet parent succeeds (or at submit),
+        both of which flag the engine's queue dirty, so the stamping
+        ``now`` is the same scheduling round either way.
+        """
+        if not self._runnable:
+            return []
+        out = []
+        for tid in self._runnable:
+            task = self.tasks[tid]
+            if task.state == TaskState.PENDING:
+                task.state = TaskState.READY
+                task.ready_time = now
+                out.append(task)
+        self._runnable.clear()
+        self.readiness_ops += len(out)
+        return out
+
+    def on_task_succeeded(self, task_id: str) -> int:
+        """Decrement children's unmet-dependency counts after a success.
+
+        Returns how many children became runnable. Must be called exactly
+        once per task success (success is terminal, so parents succeed at
+        most once per workflow run).
+        """
+        newly = 0
+        for child in self.children[task_id]:
+            self.readiness_ops += 1
+            left = self._unmet.get(child, 0) - 1
+            self._unmet[child] = left
+            if left <= 0 and self.tasks[child].state == TaskState.PENDING:
+                self._runnable[child] = None
+                newly += 1
+        return newly
+
+    def touch(self) -> None:
+        """Bump the data version (inputs/outputs mutated in place)."""
+        self.version += 1
 
     def finished(self) -> bool:
         return all(t.state.terminal for t in self.tasks.values())
@@ -279,6 +391,7 @@ class WorkflowDAG:
             return self._rank_cache
         w = weights or {}
         rank: Dict[str, float] = {}
+        self.rank_ops += len(self.tasks)
         for tid in reversed(self.topological_order()):
             cost = w.get(tid, 1.0)
             kids = self.children[tid]

@@ -102,10 +102,14 @@ class LotaruPredictor:
         self.models: Dict[str, BayesianLinReg] = defaultdict(BayesianLinReg)
         self.nodes: Dict[str, NodeProfile] = {}
         self._fallback_mean: Dict[str, float] = {}
+        # bumped whenever predictions may change — memo key for strategies
+        # caching predictor-derived quantities (HEFT weighted ranks)
+        self.version: int = 0
 
     # -- infrastructure knowledge (CWSI stores machine characteristics) --
     def register_node_bench(self, profile: NodeProfile) -> None:
         self.nodes[profile.node] = profile
+        self.version += 1
 
     def speed(self, node: Optional[str]) -> float:
         if node is None or node not in self.nodes:
@@ -126,6 +130,7 @@ class LotaruPredictor:
         self.models[name].update(_features(input_size), math.log(norm))
         m = self._fallback_mean.get(name)
         self._fallback_mean[name] = norm if m is None else 0.7 * m + 0.3 * norm
+        self.version += 1
 
     def train_from_provenance(self, store: ProvenanceStore) -> int:
         n = 0

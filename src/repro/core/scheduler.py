@@ -115,6 +115,7 @@ class CommonWorkflowScheduler:
         speculation_min_runtime: float = 30.0,
         staging_bandwidth: float = 1e9,
         use_predicted_memory: bool = False,
+        legacy_scan: bool = False,
     ) -> None:
         self.adapter = adapter
         self.strategy: Strategy = (
@@ -137,7 +138,20 @@ class CommonWorkflowScheduler:
         self.spec_copies: Dict[str, Task] = {}
         self.spec_of_original: Dict[str, str] = {}
         self.on_workflow_done: Optional[Callable[[str], None]] = None
+        # per-workflow strategy overrides (CWSI PUT /workflow/{wid}/strategy)
+        self.workflow_strategies: Dict[str, Strategy] = {}
+        # --- incremental ready queue (the live scheduling path) ---
+        # READY tasks awaiting resources, in promotion order. Updated on
+        # submit/finish/fail/node events; schedule() only drains newly
+        # runnable tasks when the dirty flag is set, so a round is
+        # O(ready), not O(all tasks of all DAGs).
+        self._ready: Dict[str, Task] = {}
+        self._dirty_dags: Dict[str, None] = {}
         self._queue_dirty = True
+        # legacy_scan=True restores the pre-incremental full-scan rounds
+        # (benchmark baseline + determinism checks); decisions are identical.
+        self.legacy_scan = legacy_scan
+        self.sched_rounds = 0
 
     # ------------------------------------------------------------------
     # resource-manager side: infrastructure events
@@ -157,7 +171,15 @@ class CommonWorkflowScheduler:
         self.schedule(now)
 
     def remove_node(self, name: str, now: float = 0.0) -> None:
-        """Node failure / scale-in: requeue everything running there."""
+        """Node failure / scale-in: requeue everything running there.
+
+        Every victim's allocation/memory bookkeeping is released (it used
+        to leak). Speculative copies that died with the node are killed
+        and their pairing cleaned up — a copy is not a DAG task, so
+        "requeuing" it would strand it READY forever while its stale
+        ``spec_of_original`` entry blocks any future speculation and makes
+        the original's success kill a phantom.
+        """
         st = self.nodes.get(name)
         if st is None:
             return
@@ -165,6 +187,18 @@ class CommonWorkflowScheduler:
         self.provenance.record_node_event(NodeEvent(name, now, "DOWN"))
         victims = [tid for tid, a in self.allocations.items() if a.node == name]
         for tid in victims:
+            self._release(tid)
+            copy = self.spec_copies.pop(tid, None)
+            if copy is not None:
+                if copy.speculative_of is not None:
+                    self.spec_of_original.pop(copy.speculative_of, None)
+                copy.state = TaskState.KILLED
+                copy.end_time = now
+                self._record(copy, "KILLED",
+                             TaskResult(False, reason=f"node {name} lost"))
+                self.mem_allocated.pop(tid, None)
+                self.adapter.kill(tid)
+                continue
             task = self._find_task(tid)
             if task is not None:
                 self._handle_failure(
@@ -205,17 +239,47 @@ class CommonWorkflowScheduler:
             dag = self.register_workflow(spec.workflow_id)
         task = dag.add_task(spec, deps)
         task.submit_time = now
-        self._queue_dirty = True
+        self._mark_dirty(spec.workflow_id)
         return task
 
     def submit_workflow(self, dag: WorkflowDAG, now: float = 0.0) -> None:
         dag.validate()
+        old = self.dags.get(dag.workflow_id)
+        if old is not None and old is not dag:
+            # a replaced DAG's running tasks would complete onto same-id
+            # tasks of the new DAG (phantom successes, leaked allocations)
+            if any(t.state.active for t in old.tasks.values()):
+                raise ValueError(
+                    f"cannot replace workflow {dag.workflow_id!r} while "
+                    f"tasks are still scheduled or running")
+            # replacing an idle workflow: drop the old DAG's queued tasks
+            for tid in [t for t, task in self._ready.items()
+                        if task.spec.workflow_id == dag.workflow_id]:
+                del self._ready[tid]
         self.dags[dag.workflow_id] = dag
         self.provenance.register_workflow(dag.workflow_id, {"name": dag.name})
         for t in dag.tasks.values():
             t.submit_time = now
-        self._queue_dirty = True
+        self._mark_dirty(dag.workflow_id)
         self.schedule(now)
+
+    def set_workflow_strategy(self, workflow_id: str,
+                              strategy: str | Strategy) -> Strategy:
+        """Per-workflow strategy override (CWSI: PUT .../strategy).
+
+        Only tasks of ``workflow_id`` are prioritized/placed by it; all
+        other workflows keep the scheduler-wide strategy.
+        """
+        strat = make_strategy(strategy) if isinstance(strategy, str) else strategy
+        self.workflow_strategies[workflow_id] = strat
+        return strat
+
+    def _strategy_for(self, task: Task) -> Strategy:
+        return self.workflow_strategies.get(task.spec.workflow_id, self.strategy)
+
+    def _mark_dirty(self, workflow_id: str) -> None:
+        self._queue_dirty = True
+        self._dirty_dags[workflow_id] = None
 
     def task_state(self, workflow_id: str, task_id: str) -> TaskState:
         return self.dags[workflow_id].task(task_id).state
@@ -262,29 +326,76 @@ class CommonWorkflowScheduler:
         )
 
     def schedule(self, now: float) -> int:
-        """Run one scheduling round; returns number of launches issued."""
+        """Run one scheduling round; returns number of launches issued.
+
+        The live path is incremental: the persistent ready queue is only
+        extended (from DAGs flagged dirty by submit/finish events) when
+        ``_queue_dirty`` is set, so a round costs O(ready) — not a
+        rescan of every task of every DAG. ``legacy_scan`` keeps the old
+        full-scan behaviour for baseline benchmarking; both paths promote
+        tasks in the same rounds and feed strategies the same ready sets,
+        so scheduling decisions are identical.
+        """
+        self.sched_rounds += 1
         ready: List[Task] = []
-        for dag in self.dags.values():
-            ready.extend(dag.ready_tasks(now))
+        if self.legacy_scan:
+            for dag in self.dags.values():
+                ready.extend(dag.ready_tasks(now))
+        else:
+            if self._queue_dirty:
+                for wid in self._dirty_dags:
+                    dag = self.dags.get(wid)
+                    if dag is None:
+                        continue
+                    for task in dag.promote_runnable(now):
+                        self._ready[task.task_id] = task
+                self._dirty_dags.clear()
+                self._queue_dirty = False
+            ready = list(self._ready.values())
         if not ready:
             return 0
         ctx = self._context(now)
-        ordered = self.strategy.prioritize(ready, ctx)
+        ordered: List[Task] = []
+        if not self.workflow_strategies:
+            ordered = self.strategy.prioritize(ready, ctx)
+        else:
+            # group by effective strategy (first-appearance order); each
+            # group is prioritized by its own strategy
+            groups: List[Tuple[Strategy, List[Task]]] = []
+            index: Dict[int, int] = {}
+            for task in ready:
+                strat = self._strategy_for(task)
+                i = index.get(id(strat))
+                if i is None:
+                    index[id(strat)] = len(groups)
+                    groups.append((strat, [task]))
+                else:
+                    groups[i][1].append(task)
+            for strat, group in groups:
+                ordered.extend(strat.prioritize(group, ctx))
         launched = 0
+        # node views only change when a launch consumes resources, so one
+        # snapshot serves every unplaced task in between
+        views: Optional[List[NodeView]] = None
         for task in ordered:
-            views = [st.view() for st in self.nodes.values() if st.up]
+            if views is None:
+                views = [st.view() for st in self.nodes.values() if st.up]
             if not views:
                 break
             mem_alloc = self._memory_for(task)
-            # strategies check fit against the *requested* allocation
-            eff = replace(task.spec, resources=replace(
-                task.spec.resources, mem_bytes=mem_alloc))
-            probe = Task(spec=eff, state=task.state,
-                         submit_time=task.submit_time)
-            node = self.strategy.place(probe, views, ctx)
+            if mem_alloc == task.spec.resources.mem_bytes:
+                probe = task
+            else:
+                # strategies check fit against the *requested* allocation
+                eff = replace(task.spec, resources=replace(
+                    task.spec.resources, mem_bytes=mem_alloc))
+                probe = Task(spec=eff, state=task.state,
+                             submit_time=task.submit_time)
+            node = self._strategy_for(task).place(probe, views, ctx)
             if node is None:
                 continue
             self._launch(task, node, mem_alloc, now)
+            views = None
             launched += 1
         if self.enable_speculation:
             self.check_speculation(now)
@@ -314,6 +425,7 @@ class CommonWorkflowScheduler:
         st.chips_free -= res.chips
         self.allocations[task.task_id] = _Allocation(node, cpus, mem_alloc, res.chips)
         self.mem_allocated[task.task_id] = mem_alloc
+        self._ready.pop(task.task_id, None)
         task.state = TaskState.SCHEDULED
         task.node = node
         task.schedule_time = now
@@ -359,6 +471,7 @@ class CommonWorkflowScheduler:
     def _finish_success(self, task: Task, now: float, result: TaskResult) -> None:
         task.state = TaskState.SUCCEEDED
         self._record(task, "SUCCEEDED", result)
+        self.mem_allocated.pop(task.task_id, None)
         # outputs become resident on the executing node (data locality)
         task.spec.outputs = tuple(
             DataRef(o.name, o.size_bytes, task.node) for o in task.spec.outputs
@@ -373,7 +486,7 @@ class CommonWorkflowScheduler:
             self.mem_predictor.observe(
                 task.name, task.spec.input_size, result.peak_mem_bytes
             )
-        self.strategy.on_task_finished(task, self._context(now))
+        self._strategy_for(task).on_task_finished(task, self._context(now))
         # a successful original kills its speculative copy and vice versa
         copy_id = self.spec_of_original.pop(task.task_id, None)
         if copy_id is not None:
@@ -381,8 +494,11 @@ class CommonWorkflowScheduler:
             if copy is not None and not copy.state.terminal:
                 copy.state = TaskState.KILLED
                 self._release(copy_id)
+                self.mem_allocated.pop(copy_id, None)
                 self.adapter.kill(copy_id)
         dag = self.dags[task.spec.workflow_id]
+        if dag.on_task_succeeded(task.task_id):
+            self._mark_dirty(dag.workflow_id)
         if dag.finished() and self.on_workflow_done is not None:
             self.on_workflow_done(dag.workflow_id)
 
@@ -391,12 +507,16 @@ class CommonWorkflowScheduler:
         staging term and data-aware placement)."""
         dag = self.dags[task.spec.workflow_id]
         outs = {o.name: o for o in task.spec.outputs}
+        if not outs:
+            return
         for child_id in dag.children[task.task_id]:
             child = dag.tasks[child_id]
             child.spec.inputs = tuple(
                 outs.get(i.name, i) if i.name in outs else i
                 for i in child.spec.inputs
             )
+        # input specs changed in place: invalidate strategy memos
+        dag.touch()
 
     def _handle_failure(self, task: Task, now: float, result: TaskResult,
                         requeue_free: bool = False) -> None:
@@ -406,6 +526,8 @@ class CommonWorkflowScheduler:
         if task.attempt > task.spec.max_retries:
             task.state = TaskState.ERROR
             task.failure_reason = result.reason
+            self.mem_allocated.pop(task.task_id, None)
+            self._ready.pop(task.task_id, None)
             log.warning("task %s permanently failed: %s", task.task_id, result.reason)
             dag = self.dags[task.spec.workflow_id]
             if dag.finished() and self.on_workflow_done is not None:
@@ -414,6 +536,8 @@ class CommonWorkflowScheduler:
         task.state = TaskState.READY
         task.node = None
         task.failure_reason = result.reason
+        # retry: straight back onto the ready queue (ready_time unchanged)
+        self._ready[task.task_id] = task
 
     # ------------------------------------------------------------------
     # straggler mitigation: speculative execution
@@ -463,15 +587,18 @@ class CommonWorkflowScheduler:
         if not result.success or orig_id is None:
             copy.state = TaskState.FAILED
             self._record(copy, "FAILED", result)
+            self.mem_allocated.pop(copy.task_id, None)
             return
         orig = self._find_task(orig_id)
         if orig is None or orig.state.terminal:
             copy.state = TaskState.KILLED      # lost the race
             self._record(copy, "KILLED", result)
+            self.mem_allocated.pop(copy.task_id, None)
             return
         # copy won: kill the straggling original, credit the workflow task
         copy.state = TaskState.SUCCEEDED
         self._record(copy, "SUCCEEDED", result)
+        self.mem_allocated.pop(copy.task_id, None)
         self._release(orig_id)
         self.adapter.kill(orig_id)
         orig.node = copy.node
@@ -491,7 +618,19 @@ class CommonWorkflowScheduler:
     def stats(self) -> Dict[str, Any]:
         return {
             "strategy": self.strategy.name,
+            "workflow_strategies": {
+                w: s.name for w, s in self.workflow_strategies.items()
+            },
             "nodes": {n: s.up for n, s in self.nodes.items()},
             "workflows": {w: d.finished() for w, d in self.dags.items()},
             "running": len(self.allocations),
+            "ready": len(self._ready),
+        }
+
+    def op_counts(self) -> Dict[str, int]:
+        """Scheduling-overhead counters (see bench_sched_scale.py)."""
+        return {
+            "rounds": self.sched_rounds,
+            "readiness_ops": sum(d.readiness_ops for d in self.dags.values()),
+            "rank_ops": sum(d.rank_ops for d in self.dags.values()),
         }

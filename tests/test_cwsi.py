@@ -82,10 +82,38 @@ def test_version_and_error_codes(rig):
 def test_strategy_switch_via_interface(rig):
     _, cws, _, client = rig
     client.register_workflow("wf2")
+    global_name = cws.strategy.name
     client.set_strategy("wf2", "heft")
-    assert cws.strategy.name == "heft"
+    # the override is scoped to wf2 — the global strategy is untouched
+    assert cws.strategy.name == global_name
+    assert cws.workflow_strategies["wf2"].name == "heft"
     with pytest.raises(CWSIError):
         client.set_strategy("wf2", "not-a-strategy")
+
+
+def test_lowercase_methods_are_routed(rig):
+    """HTTP methods are case-insensitive: lowercase must not 404."""
+    _, cws, server, _ = rig
+    resp = json.loads(server.handle(json.dumps(
+        {"method": "post", "path": "/v1/workflow/wlc", "body": {"name": "lc"}})))
+    assert resp["status"] == 200 and resp["body"]["workflowId"] == "wlc"
+    resp = json.loads(server.handle(json.dumps(
+        {"method": "put", "path": "/v1/workflow/wlc/strategy",
+         "body": {"strategy": "fifo_rr"}})))
+    assert resp["status"] == 200
+    assert cws.workflow_strategies["wlc"].name == "fifo_rr"
+    resp = json.loads(server.handle(json.dumps(
+        {"method": "get", "path": "/v1/workflow/wlc/state"})))
+    assert resp["status"] == 200 and resp["body"]["finished"]
+
+
+def test_truncated_provenance_paths_return_404(rig):
+    """/provenance/task with no name must be a 404 envelope, not a crash."""
+    _, _, server, _ = rig
+    for path in ("/v1/provenance/task", "/v1/provenance/workflow"):
+        resp = json.loads(server.handle(json.dumps(
+            {"method": "GET", "path": path})))
+        assert resp["status"] == 404, path
 
 
 def test_predict_endpoint(rig):

@@ -1,0 +1,264 @@
+"""Regression tests for the incremental scheduling core.
+
+Covers the invariants the refactor must preserve:
+  * legacy full-scan and incremental ready-queue scheduling make identical
+    decisions (bit-identical makespans for every strategy, same seeds),
+  * node loss with speculative copies in flight leaks no allocation or
+    speculation bookkeeping and the workflow still completes,
+  * incremental unit-rank patching matches the full recompute,
+  * per-workflow strategy overrides are scoped to their workflow,
+  * the simulator garbage-collects its launch maps.
+"""
+import numpy as np
+import pytest
+
+from repro.cluster import (
+    ClusterSimulator,
+    SimConfig,
+    build_workflow,
+    heterogeneous_cluster,
+    run_workflow,
+)
+from repro.cluster.nodes import cpu_node
+from repro.core import (
+    CommonWorkflowScheduler,
+    DataRef,
+    LotaruPredictor,
+    NodeInfo,
+    Resources,
+    TaskSpec,
+    TaskState,
+    WorkflowDAG,
+)
+from repro.core.scheduler import TaskResult
+from repro.core.strategies import STRATEGIES
+
+GiB = 1 << 30
+
+
+# ---------------------------------------------------------------------------
+# determinism: incremental scheduling == legacy full-scan scheduling
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("strategy", sorted(STRATEGIES))
+def test_incremental_matches_legacy_makespan(strategy):
+    """Same seeds → bit-identical makespans, old scan vs incremental queue."""
+    for wf, seed in (("chipseq", 1), ("sarek", 4)):
+        results = []
+        for legacy in (False, True):
+            dag = build_workflow(wf, seed=seed, n_samples=3)
+            ms, cws = run_workflow(
+                dag, heterogeneous_cluster(4), strategy,
+                SimConfig(seed=seed), predictor=LotaruPredictor(),
+                legacy_scan=legacy)
+            assert dag.succeeded()
+            results.append(ms)
+        assert results[0] == results[1], (strategy, wf, seed, results)
+
+
+def test_incremental_is_cheaper_than_legacy():
+    """The point of the refactor: far fewer readiness/rank operations."""
+    ops = {}
+    for legacy in (False, True):
+        dag = build_workflow("rnaseq", seed=0)
+        _, cws = run_workflow(dag, heterogeneous_cluster(4), "rank_min_rr",
+                              SimConfig(seed=0), legacy_scan=legacy)
+        c = cws.op_counts()
+        ops[legacy] = c["readiness_ops"] + c["rank_ops"]
+    assert ops[False] * 5 <= ops[True], ops
+
+
+# ---------------------------------------------------------------------------
+# node loss + speculation: no leaks, no phantom kills
+# ---------------------------------------------------------------------------
+class _RecordingAdapter:
+    def __init__(self):
+        self.launched = []
+        self.killed = []
+
+    def launch(self, task, node, mem_alloc):
+        self.launched.append((task.task_id, node))
+
+    def kill(self, task_id):
+        self.killed.append(task_id)
+
+
+def _one_task_rig():
+    adapter = _RecordingAdapter()
+    pred = LotaruPredictor()
+    for sz in (GiB, GiB, 2 * GiB, 2 * GiB):
+        pred.observe("slowproc", sz, 10.0)
+    cws = CommonWorkflowScheduler(
+        adapter=adapter, strategy="rank_min_rr", predictor=pred,
+        enable_speculation=True, speculation_factor=1.0,
+        speculation_min_runtime=1.0)
+    cws.add_node(NodeInfo("n0", cpus=4, mem_bytes=8 * GiB), now=0.0)
+    cws.add_node(NodeInfo("n1", cpus=4, mem_bytes=8 * GiB), now=0.0)
+    dag = WorkflowDAG("w", "w")
+    dag.add_task(TaskSpec(task_id="w.t0", name="slowproc",
+                          inputs=(DataRef("in", GiB),),
+                          resources=Resources(cpus=1.0, mem_bytes=GiB)))
+    cws.submit_workflow(dag, now=0.0)
+    cws.on_task_started("w.t0", now=0.0)
+    # far beyond the predicted 10s → a speculative copy launches on the
+    # other node
+    n = cws.check_speculation(now=100.0)
+    assert n == 1 and len(cws.spec_copies) == 1
+    return adapter, cws, dag
+
+
+def test_node_loss_kills_speculative_copy_cleanly():
+    adapter, cws, dag = _one_task_rig()
+    copy_id = next(iter(cws.spec_copies))
+    copy_node = cws.allocations[copy_id].node
+    cws.remove_node(copy_node, now=120.0)
+    # the copy is killed and every bit of its bookkeeping is gone
+    assert cws.spec_copies == {} and cws.spec_of_original == {}
+    assert copy_id not in cws.allocations
+    assert copy_id not in cws.mem_allocated
+    assert copy_id in adapter.killed
+    # the original still runs; finishing it must not kill a phantom copy
+    kills_before = len(adapter.killed)
+    cws.on_task_finished("w.t0", now=130.0, result=TaskResult(True))
+    assert len(adapter.killed) == kills_before
+    assert dag.succeeded()
+    assert cws.allocations == {} and cws.mem_allocated == {}
+    # with the stale pairing gone, speculation is unblocked for new tasks
+    assert cws.spec_of_original == {}
+
+
+def test_node_loss_requeues_original_and_releases_allocations():
+    adapter, cws, dag = _one_task_rig()
+    orig_node = cws.allocations["w.t0"].node
+    cws.remove_node(orig_node, now=120.0)
+    # the dead node's allocation is released; the requeued original is
+    # immediately relaunched on the surviving node by the same round
+    task = dag.task("w.t0")
+    assert task.state in (TaskState.READY, TaskState.SCHEDULED)
+    alloc = cws.allocations.get("w.t0")
+    assert alloc is None or alloc.node != orig_node
+    # the surviving speculative copy races on; its win completes the task
+    copy_id = cws.spec_of_original.get("w.t0")
+    assert copy_id is not None
+    cws.on_task_finished(copy_id, now=140.0, result=TaskResult(True))
+    assert dag.succeeded()
+    assert cws.allocations == {} and cws.mem_allocated == {}
+    assert cws.spec_copies == {} and cws.spec_of_original == {}
+
+
+def test_node_loss_with_speculation_end_to_end():
+    """Simulator-driven: crash a node mid-flight with speculation enabled;
+    the workflow completes and nothing leaks anywhere."""
+    dag = build_workflow("chipseq", seed=0, n_samples=4)
+    sim = ClusterSimulator(
+        heterogeneous_cluster(4),
+        SimConfig(seed=2, straggler_prob=0.4, straggler_factor=(4.0, 6.0),
+                  speculation_period=5.0))
+    pred = LotaruPredictor()
+    cws = CommonWorkflowScheduler(
+        adapter=sim, strategy="rank_min_rr", predictor=pred,
+        enable_speculation=True, speculation_factor=1.2,
+        speculation_min_runtime=5.0)
+    sim.attach(cws)
+    sim.submit_workflow_at(0.0, dag)
+    sim.fail_node_at(120.0, "node-01")
+    sim.fail_node_at(400.0, "node-03")
+    sim.run()
+    assert dag.succeeded()
+    assert cws.allocations == {} and cws.mem_allocated == {}
+    assert cws.spec_copies == {} and cws.spec_of_original == {}
+    # simulator launch bookkeeping is garbage-collected too
+    assert sim._task_of_launch == {} and sim._node_of_launch == {}
+    assert sim._gens_on_node == {}
+
+
+# ---------------------------------------------------------------------------
+# incremental rank maintenance
+# ---------------------------------------------------------------------------
+def test_rank_patching_matches_full_recompute():
+    rng = np.random.default_rng(3)
+    dag = WorkflowDAG("r", "r")
+    patched = WorkflowDAG("r", "r")
+    ids = []
+    for i in range(40):
+        spec_a = TaskSpec(task_id=f"t{i}", name="x")
+        spec_b = TaskSpec(task_id=f"t{i}", name="x")
+        k = int(rng.integers(0, min(3, i) + 1)) if i else 0
+        deps = list(rng.choice(ids, size=k, replace=False)) if k else []
+        dag.add_task(spec_a, deps=deps)
+        patched.add_task(spec_b, deps=deps)
+        patched.ranks()          # keep the cache warm → exercise patching
+        ids.append(f"t{i}")
+    assert patched.ranks() == dag.ranks()
+
+
+def test_rank_patch_survives_cross_edges():
+    dag = WorkflowDAG("r2", "r2")
+    for i in range(6):
+        dag.add_task(TaskSpec(task_id=f"t{i}", name="x"))
+    dag.ranks()                  # warm cache, then patch edge by edge
+    for parent, child in (("t0", "t1"), ("t1", "t2"), ("t3", "t2"),
+                          ("t0", "t4"), ("t4", "t2"), ("t5", "t0")):
+        dag.add_dep(parent, child)
+    fresh = WorkflowDAG("r2", "r2")
+    for i in range(6):
+        fresh.add_task(TaskSpec(task_id=f"t{i}", name="x"))
+    for parent, child in (("t0", "t1"), ("t1", "t2"), ("t3", "t2"),
+                          ("t0", "t4"), ("t4", "t2"), ("t5", "t0")):
+        fresh.add_dep(parent, child)
+    assert dag.ranks() == fresh.ranks()
+
+
+# ---------------------------------------------------------------------------
+# per-workflow strategy scoping
+# ---------------------------------------------------------------------------
+def test_per_workflow_strategy_only_affects_its_workflow():
+    sim = ClusterSimulator([cpu_node("n0"), cpu_node("n1")], SimConfig(seed=0))
+    cws = CommonWorkflowScheduler(adapter=sim, strategy="rank_min_rr")
+    sim.attach(cws)
+    cws.set_workflow_strategy("wfB", "original")
+    dag_a = build_workflow("viralrecon", seed=1, workflow_id="wfA", n_samples=2)
+    dag_b = build_workflow("viralrecon", seed=2, workflow_id="wfB", n_samples=2)
+    sim.submit_workflow_at(0.0, dag_a)
+    sim.submit_workflow_at(0.0, dag_b)
+    sim.run()
+    assert dag_a.succeeded() and dag_b.succeeded()
+    assert cws.strategy.name == "rank_min_rr"
+    assert cws.workflow_strategies["wfB"].name == "original"
+
+
+# ---------------------------------------------------------------------------
+# workflow replacement safety
+# ---------------------------------------------------------------------------
+def test_replacing_workflow_with_active_tasks_is_rejected():
+    """A replaced DAG's running tasks would complete onto same-id tasks of
+    the new DAG (phantom successes); mid-flight replacement must refuse."""
+    adapter = _RecordingAdapter()
+    cws = CommonWorkflowScheduler(adapter=adapter, strategy="rank_min_rr")
+    cws.add_node(NodeInfo("n0", cpus=4, mem_bytes=8 * GiB), now=0.0)
+    dag = WorkflowDAG("w", "w")
+    dag.add_task(TaskSpec(task_id="w.t0", name="p",
+                          resources=Resources(cpus=1.0, mem_bytes=GiB)))
+    cws.submit_workflow(dag, now=0.0)
+    assert dag.task("w.t0").state == TaskState.SCHEDULED
+    replacement = WorkflowDAG("w", "w")
+    replacement.add_task(TaskSpec(task_id="w.t0", name="p"))
+    with pytest.raises(ValueError, match="replace workflow"):
+        cws.submit_workflow(replacement, now=1.0)
+    # once the old run is idle again, replacement is allowed
+    cws.on_task_finished("w.t0", now=2.0, result=TaskResult(True))
+    replacement2 = WorkflowDAG("w", "w")
+    replacement2.add_task(TaskSpec(task_id="w.t0", name="p",
+                                   resources=Resources(cpus=1.0, mem_bytes=GiB)))
+    cws.submit_workflow(replacement2, now=3.0)
+    cws.on_task_finished("w.t0", now=4.0, result=TaskResult(True))
+    assert replacement2.succeeded()
+
+
+def test_failed_submit_leaves_no_partial_task():
+    dag = WorkflowDAG("w", "w")
+    with pytest.raises(KeyError):
+        dag.add_task(TaskSpec(task_id="w.t0", name="p"), deps=("missing",))
+    assert "w.t0" not in dag
+    # the same id can then be submitted cleanly
+    dag.add_task(TaskSpec(task_id="w.t0", name="p"))
+    assert "w.t0" in dag

@@ -4,7 +4,12 @@ import math
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property-based suite needs hypothesis (pip install -r requirements-dev.txt)",
+)
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.predict import (
     BayesianLinReg,

@@ -7,7 +7,13 @@ For random DAGs, random heterogeneous clusters, and every strategy:
   * the makespan is at least the critical-path lower bound.
 """
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property-based suite needs hypothesis (pip install -r requirements-dev.txt)",
+)
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.cluster import ClusterSimulator, SimConfig
 from repro.cluster.nodes import cpu_node
