@@ -13,9 +13,22 @@ O(all-tasks)-per-round behaviour) — and reports:
 
 Makespans must be bit-identical between the two engines — the refactor
 changes the cost of decisions, never the decisions.
+
+The **mixed-tenant sweep** adds the arbitration/placement claims: 10
+concurrent workflows with unequal fair shares on a deliberately
+undersized cluster (a permanent unplaceable backlog). Asserted:
+
+  * the placement feasibility index keeps probes sublinear in the
+    unplaceable-ready backlog (≥5× fewer ``Strategy.place`` calls than
+    the probe-everything legacy walk, identical makespans),
+  * fair-share deficits always sum to ~0 (share conservation) and their
+    mean magnitude is no worse than under first-appearance arbitration.
+
+``BENCH_SMOKE=1`` shrinks every sweep to a CI-sized smoke (~seconds).
 """
 from __future__ import annotations
 
+import os
 import time
 from typing import Any, Dict, List, Tuple
 
@@ -27,16 +40,23 @@ from repro.cluster import (
 )
 from repro.core import CommonWorkflowScheduler, LotaruPredictor
 
+SMOKE = bool(os.environ.get("BENCH_SMOKE"))
+
 # 10 concurrent workflows x ~500 tasks each (rnaseq: 7 per-sample stages +
 # 1 merge -> 7*71+1 = 498 tasks)
-N_WORKFLOWS = 10
-N_SAMPLES = 71
+N_WORKFLOWS = 4 if SMOKE else 10
+N_SAMPLES = 12 if SMOKE else 71
 N_NODES = 16
 
 # secondary sweep sized so the legacy per-ready-task HEFT rank recompute
 # finishes in reasonable wall time
-HEFT_WORKFLOWS = 4
-HEFT_SAMPLES = 17
+HEFT_WORKFLOWS = 2 if SMOKE else 4
+HEFT_SAMPLES = 6 if SMOKE else 17
+
+# mixed-tenant arbitration sweep: unequal shares, undersized cluster
+TENANT_WORKFLOWS = 4 if SMOKE else 10
+TENANT_SAMPLES = 6 if SMOKE else 20
+TENANT_NODES = 4
 
 
 def _sweep(strategy: str, legacy: bool, n_workflows: int,
@@ -105,6 +125,101 @@ def _compare(strategy: str, n_workflows: int, n_samples: int,
     return op_ratio, us_ratio
 
 
+def _tenant_sweep(arbiter: str, legacy: bool) -> Dict[str, Any]:
+    """Unequal-share tenants on an undersized cluster: every round carries
+    an unplaceable backlog, the regime the feasibility index targets."""
+    sim = ClusterSimulator(heterogeneous_cluster(TENANT_NODES),
+                           SimConfig(seed=13))
+    cws = CommonWorkflowScheduler(adapter=sim, strategy="rank_min_rr",
+                                  arbiter=arbiter, legacy_scan=legacy)
+    shares = {f"wf-{i}": float(1 + i % 4) for i in range(TENANT_WORKFLOWS)}
+    for wid, share in shares.items():
+        cws.set_workflow_share(wid, share)
+    sim.attach(cws)
+
+    deficit_sums: List[float] = []
+    deficit_abs: List[float] = []
+    ready_probed = [0]
+    inner = cws.schedule
+
+    def sampling_schedule(now: float) -> int:
+        ready_probed[0] += len(cws._ready)
+        n = inner(now)
+        if cws._ready and not all(d.finished() for d in cws.dags.values()):
+            d = cws.arbiter_status()["deficits"]
+            if d:
+                deficit_sums.append(abs(sum(d.values())))
+                deficit_abs.append(max(abs(v) for v in d.values()))
+        return n
+
+    cws.schedule = sampling_schedule
+    dags = []
+    for i in range(TENANT_WORKFLOWS):
+        dag = build_workflow("rnaseq", seed=200 + i, workflow_id=f"wf-{i}",
+                             n_samples=TENANT_SAMPLES)
+        dags.append(dag)
+        sim.submit_workflow_at(0.0, dag)
+    sim.run()
+    assert all(d.succeeded() for d in dags)
+    counts = cws.op_counts()
+    return {
+        "makespans": [cws.provenance.makespan(d.workflow_id) for d in dags],
+        "probes": counts["placement_probes"],
+        "feasibility_checks": counts["feasibility_checks"],
+        "rounds": counts["rounds"],
+        "ready_backlog": ready_probed[0],
+        "launches": sim.launches,
+        "deficit_sum_max": max(deficit_sums, default=0.0),
+        "deficit_abs_mean": (sum(deficit_abs) / len(deficit_abs)
+                             if deficit_abs else 0.0),
+    }
+
+
+def _mixed_tenant(verbose: bool) -> Dict[str, float]:
+    fair = _tenant_sweep("fair_share", legacy=False)
+    fair_legacy = _tenant_sweep("fair_share", legacy=True)
+    fifo = _tenant_sweep("first_appearance", legacy=False)
+    probe_ratio = fair_legacy["probes"] / max(fair["probes"], 1)
+    if verbose:
+        print(f"  mixed-tenant {TENANT_WORKFLOWS} workflows (shares 1-4), "
+              f"{TENANT_NODES} nodes, {fair['rounds']} rounds, "
+              f"backlog {fair['ready_backlog']:,} ready-task probes offered")
+        print(f"    placement probes legacy {fair_legacy['probes']:>10,}  "
+              f"indexed {fair['probes']:>10,}  ({probe_ratio:.1f}x fewer; "
+              f"{fair['feasibility_checks']:,} watermark checks)")
+        print(f"    deficit |sum| max {fair['deficit_sum_max']:.2e}  "
+              f"mean max|deficit| fair {fair['deficit_abs_mean']:.4f} vs "
+              f"first-appearance {fifo['deficit_abs_mean']:.4f}")
+        print(f"    makespans identical legacy vs indexed: "
+              f"{fair['makespans'] == fair_legacy['makespans']}")
+    # decision identity: the index changes the cost of placement, never
+    # its outcome (same arbiter, legacy probe-everything vs indexed walk)
+    assert fair["makespans"] == fair_legacy["makespans"], (
+        "placement feasibility index changed scheduling decisions")
+    # probes sublinear in the unplaceable backlog: the legacy walk probes
+    # every ready task every round; the index must beat it >=5x and stay
+    # within a small multiple of actual work done (launch-bound, not
+    # backlog-bound)
+    assert probe_ratio >= 5.0, f"probe reduction only {probe_ratio:.1f}x"
+    assert fair["probes"] <= 3 * fair["launches"] + fair["rounds"], (
+        fair["probes"], fair["launches"], fair["rounds"])
+    # share conservation: deficits sum to zero by construction — this
+    # only sanity-checks the metric plumbing (NaNs, sign bugs). The
+    # *behavioral* fairness claims are the two asserts after it: the
+    # worst tenant's deficit stays small in absolute dominant-share terms
+    # (each unit is a whole cluster's worth of resources), and fair-share
+    # arbitration is no less fair than first-appearance on the same load
+    assert fair["deficit_sum_max"] < 1e-6, fair["deficit_sum_max"]
+    assert fair["deficit_abs_mean"] <= 0.3, fair["deficit_abs_mean"]
+    assert fair["deficit_abs_mean"] <= fifo["deficit_abs_mean"] + 1e-9, (
+        fair["deficit_abs_mean"], fifo["deficit_abs_mean"])
+    return {
+        "tenant_probe_reduction_x": probe_ratio,
+        "tenant_deficit_abs_mean_fair": fair["deficit_abs_mean"],
+        "tenant_deficit_abs_mean_first_appearance": fifo["deficit_abs_mean"],
+    }
+
+
 def run(verbose: bool = True) -> Tuple[float, Dict[str, float]]:
     t0 = time.time()
     rank_ops, rank_us = _compare("rank_min_rr", N_WORKFLOWS, N_SAMPLES, verbose)
@@ -115,9 +230,13 @@ def run(verbose: bool = True) -> Tuple[float, Dict[str, float]]:
         "heft_op_reduction_x": heft_ops,
         "heft_us_per_round_speedup_x": heft_us,
     }
+    out.update(_mixed_tenant(verbose))
     # the tentpole claim: >=5x fewer rank/readiness computations at scale
-    assert rank_ops >= 5.0, f"op reduction only {rank_ops:.1f}x"
-    assert heft_ops >= 5.0, f"HEFT op reduction only {heft_ops:.1f}x"
+    # (the CI smoke runs far below the scale the claim is about — only
+    # sanity-check the direction there)
+    floor = 2.0 if SMOKE else 5.0
+    assert rank_ops >= floor, f"op reduction only {rank_ops:.1f}x"
+    assert heft_ops >= floor, f"HEFT op reduction only {heft_ops:.1f}x"
     return time.time() - t0, out
 
 

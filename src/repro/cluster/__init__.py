@@ -10,7 +10,12 @@ from .nodes import (  # noqa: F401
     tpu_fleet,
     tpu_slice,
 )
-from .simulator import ClusterSimulator, SimConfig, run_workflow  # noqa: F401
+from .simulator import (  # noqa: F401
+    ClusterSimulator,
+    SimConfig,
+    run_workflow,
+    run_workflows,
+)
 from .traces import (  # noqa: F401
     NF_CORE_TEMPLATES,
     NF_CORE_WORKFLOWS,

@@ -19,6 +19,7 @@ from __future__ import annotations
 import heapq
 import itertools
 import math
+import warnings
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
@@ -239,14 +240,56 @@ def run_workflow(
     **cws_kwargs: Any,
 ) -> Tuple[float, CommonWorkflowScheduler]:
     """Convenience: simulate one workflow to completion, return (makespan, cws)."""
+    makespans, cws = run_workflows([dag], nodes, strategy, sim_config,
+                                   **cws_kwargs)
+    return makespans[dag.workflow_id], cws
+
+
+def run_workflows(
+    dags: List[WorkflowDAG],
+    nodes: List[NodeInfo],
+    strategy: str = "rank_min_rr",
+    sim_config: Optional[SimConfig] = None,
+    submit_times: Optional[List[float]] = None,
+    shares: Optional[Dict[str, float]] = None,
+    arbiter: str = "first_appearance",
+    **cws_kwargs: Any,
+) -> Tuple[Dict[str, float], CommonWorkflowScheduler]:
+    """Multi-tenant convenience: run concurrent workflows under an arbiter.
+
+    ``shares`` maps workflow_id → fair-share weight / strict priority
+    (set before any submission, as a tenant would over the CWSI); returns
+    per-workflow makespans keyed by workflow_id plus the scheduler.
+    """
+    if shares and arbiter == "first_appearance":
+        # shares are harmless tenant policy (the CWSI accepts them any
+        # time), but under this arbiter they do nothing — surface the
+        # no-op instead of raising so arbiter-comparison sweeps can reuse
+        # one tenant config
+        warnings.warn(
+            "shares have no effect under the first_appearance arbiter; "
+            "pass arbiter='fair_share' or 'strict_priority' to use them",
+            stacklevel=2)
     sim = ClusterSimulator(nodes, sim_config)
-    cws = CommonWorkflowScheduler(adapter=sim, strategy=strategy, **cws_kwargs)
+    cws = CommonWorkflowScheduler(adapter=sim, strategy=strategy,
+                                  arbiter=arbiter, **cws_kwargs)
+    for wid, share in (shares or {}).items():
+        cws.set_workflow_share(wid, share)
     sim.attach(cws)
-    sim.submit_workflow_at(0.0, dag)
+    times = submit_times if submit_times is not None else [0.0] * len(dags)
+    if len(times) != len(dags):
+        raise ValueError(
+            f"submit_times has {len(times)} entries for {len(dags)} workflows")
+    for dag, t in zip(dags, times):
+        sim.submit_workflow_at(t, dag)
     sim.run()
-    if not dag.finished():
-        raise RuntimeError(
-            f"workflow {dag.workflow_id} did not finish "
-            f"({sum(t.state.terminal for t in dag.tasks.values())}/{len(dag)})"
-        )
-    return cws.provenance.makespan(dag.workflow_id), cws
+    unfinished = [d for d in dags if not d.finished()]
+    if unfinished:
+        raise RuntimeError("workflows did not finish: " + ", ".join(
+            f"{d.workflow_id} "
+            f"({sum(t.state.terminal for t in d.tasks.values())}/{len(d)})"
+            for d in unfinished))
+    return (
+        {d.workflow_id: cws.provenance.makespan(d.workflow_id) for d in dags},
+        cws,
+    )

@@ -10,6 +10,17 @@ from .dag import (  # noqa: F401
     WorkflowDAG,
     fresh_task_id,
 )
+from .arbiter import (  # noqa: F401
+    ARBITERS,
+    Arbiter,
+    ArbiterContext,
+    FirstAppearanceArbiter,
+    StrictPriorityArbiter,
+    WeightedFairShareArbiter,
+    deficits,
+    dominant_cost,
+    make_arbiter,
+)
 from .cwsi import CWSI_VERSION, CWSIClient, CWSIError, CWSIServer  # noqa: F401
 from .predict import (  # noqa: F401
     FeedbackMemoryPredictor,

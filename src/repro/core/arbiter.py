@@ -1,0 +1,278 @@
+"""Inter-workflow arbitration for the Common Workflow Scheduler.
+
+The CWSI paper's central promise is a *workflow-aware* resource manager.
+Awareness within one workflow is the job of the ``Strategy`` (ordering by
+rank, placement by round robin / EFT / Tarema labels); this module owns the
+question the companion proposal (arXiv:2302.07652) and WaaS platforms
+(Hilman et al., arXiv:2006.01957) raise for multi-tenant clusters: *when
+several workflows compete, whose ready task grabs resources next?*
+
+An ``Arbiter`` interleaves per-workflow priority lists into the single
+global order ``CommonWorkflowScheduler.schedule()`` walks:
+
+  * ``FirstAppearanceArbiter`` — the pre-arbitration behaviour, preserved
+    bit-identically: one global prioritize when every workflow shares the
+    scheduler-wide strategy, else per-strategy groups in first-appearance
+    order. This is the default ("arbiter off").
+  * ``WeightedFairShareArbiter`` — weighted max-min fairness on the
+    *running-allocation deficit*: each workflow owns a share weight (CWSI
+    ``PUT /workflow/{wid}/share``); tasks are emitted from the workflow
+    whose dominant-resource usage divided by its share is smallest,
+    charging each emission so one backlogged tenant cannot flood a round.
+  * ``StrictPriorityArbiter`` — shares act as priorities; all ready tasks
+    of a higher-share workflow precede any task of a lower-share one.
+
+Fairness bookkeeping is scalar: a task or allocation is charged its
+**dominant share** — the max of its cpu/mem/chip request as a fraction of
+cluster totals (the DRF measure). ``deficits()`` reports, per unfinished
+workflow, ``share-weighted target − actual usage``; the targets are
+normalised to current total usage, so deficits always sum to ~0 (share
+conservation — asserted by the property suite and ``make bench``).
+"""
+from __future__ import annotations
+
+from abc import ABC, abstractmethod
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Mapping, Optional, Tuple, TYPE_CHECKING
+
+from .dag import Task
+
+if TYPE_CHECKING:  # pragma: no cover
+    from .strategies import SchedulingContext, Strategy
+
+
+def dominant_cost(cpus: float, mem: int, chips: int,
+                  totals: Mapping[str, float]) -> float:
+    """DRF scalar: the largest fraction of any one cluster resource used."""
+    frac = 0.0
+    if totals.get("cpus", 0) > 0 and chips == 0:
+        frac = max(frac, cpus / totals["cpus"])
+    if totals.get("mem", 0) > 0:
+        frac = max(frac, mem / totals["mem"])
+    if totals.get("chips", 0) > 0 and chips > 0:
+        frac = max(frac, chips / totals["chips"])
+    return frac
+
+
+def deficits(shares: Mapping[str, float], usage: Mapping[str, float],
+             active: List[str]) -> Dict[str, float]:
+    """Per-workflow fair-share deficit: target − actual running usage.
+
+    Targets split the *current* total usage by share weight over the
+    ``active`` (unfinished) workflows, so the deficits sum to zero by
+    construction; a positive deficit means the workflow is running below
+    its entitlement.
+    """
+    if not active:
+        return {}
+    weight = {wid: max(float(shares.get(wid, 1.0)), 0.0) for wid in active}
+    wsum = sum(weight.values())
+    total = sum(usage.get(wid, 0.0) for wid in active)
+    if wsum <= 0.0:
+        return {wid: 0.0 for wid in active}
+    return {
+        wid: total * weight[wid] / wsum - usage.get(wid, 0.0)
+        for wid in active
+    }
+
+
+@dataclass
+class ArbiterContext:
+    """Everything an arbiter may consult, assembled per scheduling round.
+
+    ``usage`` and ``totals`` are computed lazily (callables supplied by the
+    engine) so the default first-appearance path pays nothing for them.
+    """
+
+    ctx: "SchedulingContext"
+    strategy_for: Callable[[Task], "Strategy"]
+    # set iff every workflow uses the scheduler-wide strategy (no overrides)
+    single_strategy: Optional["Strategy"]
+    shares: Mapping[str, float]
+    appearance_fn: Callable[[], Dict[str, int]] = dict  # wid -> reg. order
+    # usage_fn receives the (cached) cluster totals so one node scan per
+    # round serves both the usage and totals views
+    usage_fn: Callable[[Mapping[str, float]], Dict[str, float]] = (
+        lambda totals: {})
+    totals_fn: Callable[[], Dict[str, float]] = dict
+    _appearance: Optional[Dict[str, int]] = field(default=None, repr=False)
+    _usage: Optional[Dict[str, float]] = field(default=None, repr=False)
+    _totals: Optional[Dict[str, float]] = field(default=None, repr=False)
+
+    @property
+    def appearance(self) -> Dict[str, int]:
+        if self._appearance is None:
+            self._appearance = self.appearance_fn()
+        return self._appearance
+
+    @property
+    def usage(self) -> Dict[str, float]:
+        if self._usage is None:
+            self._usage = self.usage_fn(self.totals)
+        return self._usage
+
+    @property
+    def totals(self) -> Dict[str, float]:
+        if self._totals is None:
+            self._totals = self.totals_fn()
+        return self._totals
+
+    def share_of(self, wid: str) -> float:
+        return float(self.shares.get(wid, 1.0))
+
+
+class Arbiter(ABC):
+    """Interleaves per-workflow priority lists into one global order."""
+
+    name: str = "abstract"
+
+    @abstractmethod
+    def order(self, ready: List[Task], actx: ArbiterContext) -> List[Task]:
+        ...
+
+    # ------------------------------------------------------------------
+    def _workflow_queues(
+        self, ready: List[Task], actx: ArbiterContext
+    ) -> List[Tuple[str, List[Task]]]:
+        """Per-workflow priority lists, first-appearance order of workflows.
+
+        Each workflow's ready tasks are ordered by its *effective* strategy
+        (per-workflow override or scheduler-wide). Restricting a strategy's
+        per-task sort key to one workflow's tasks yields the subsequence of
+        the global order, so intra-workflow priorities are unchanged by
+        arbitration — only the interleaving between workflows is.
+        """
+        queues: Dict[str, List[Task]] = {}
+        for task in ready:
+            queues.setdefault(task.spec.workflow_id, []).append(task)
+        return [
+            (wid, actx.strategy_for(tasks[0]).prioritize(tasks, actx.ctx))
+            for wid, tasks in queues.items()
+        ]
+
+
+class FirstAppearanceArbiter(Arbiter):
+    """Arbiter "off": the exact pre-arbitration ordering.
+
+    Without per-workflow strategy overrides, ready tasks of *all* workflows
+    are prioritized by the single scheduler-wide strategy (cross-workflow
+    order falls out of the strategy's own keys — first-appearance on ties).
+    With overrides, tasks group by effective strategy in first-appearance
+    order and each group is prioritized by its own strategy. Bit-identical
+    to the PR 1 engine; the golden-trace suite holds it there.
+    """
+
+    name = "first_appearance"
+
+    def order(self, ready: List[Task], actx: ArbiterContext) -> List[Task]:
+        if actx.single_strategy is not None:
+            return actx.single_strategy.prioritize(ready, actx.ctx)
+        ordered: List[Task] = []
+        groups: List[Tuple["Strategy", List[Task]]] = []
+        index: Dict[int, int] = {}
+        for task in ready:
+            strat = actx.strategy_for(task)
+            i = index.get(id(strat))
+            if i is None:
+                index[id(strat)] = len(groups)
+                groups.append((strat, [task]))
+            else:
+                groups[i][1].append(task)
+        for strat, group in groups:
+            ordered.extend(strat.prioritize(group, actx.ctx))
+        return ordered
+
+
+class WeightedFairShareArbiter(Arbiter):
+    """Weighted max-min: emit from the workflow with the lowest
+    usage-to-share ratio, charging each emitted task's dominant cost.
+
+    ``usage`` starts from the *running allocations* (what the cluster is
+    actually executing), so a workflow that has been starved of launches
+    carries the largest deficit and wins the next slots; charging virtual
+    usage as tasks are emitted interleaves within the round instead of
+    letting one tenant drain first. Zero-share workflows sort strictly
+    after every positive-share workflow in the emitted order; note the
+    arbiter only *orders* — the engine still launches anything later in
+    the order that fits when earlier tasks are unplaceable, so best-effort
+    tenants can fill capacity positive-share tenants cannot use.
+    """
+
+    name = "fair_share"
+
+    def order(self, ready: List[Task], actx: ArbiterContext) -> List[Task]:
+        queues = self._workflow_queues(ready, actx)
+        if len(queues) <= 1:
+            return queues[0][1] if queues else []
+        totals = actx.totals
+        virt: Dict[str, float] = {}
+        share: Dict[str, float] = {}
+        for wid, _ in queues:
+            virt[wid] = actx.usage.get(wid, 0.0)
+            share[wid] = max(actx.share_of(wid), 0.0)
+        heads = {wid: 0 for wid, _ in queues}
+        live = [(wid, q) for wid, q in queues if q]
+        out: List[Task] = []
+
+        def key(wid: str) -> Tuple[float, float]:
+            # zero-share workflows are a strictly lower tier: serviced only
+            # when no positive-share workflow has ready tasks, no matter
+            # how lopsided the positive-share ratios get
+            if share[wid] <= 0.0:
+                return (1.0, virt[wid])
+            return (0.0, virt[wid] / share[wid])
+
+        while live:
+            best = min(
+                live,
+                key=lambda wq: (key(wq[0]),
+                                actx.appearance.get(wq[0], 1 << 30), wq[0]),
+            )
+            wid, q = best
+            task = q[heads[wid]]
+            heads[wid] += 1
+            out.append(task)
+            res = task.spec.resources
+            # charge at least a token amount so zero-cost tasks still rotate
+            virt[wid] += max(
+                dominant_cost(res.cpus, res.mem_bytes, res.chips, totals),
+                1e-9,
+            )
+            if heads[wid] >= len(q):
+                live = [(w, qq) for w, qq in live if w != wid]
+        return out
+
+
+class StrictPriorityArbiter(Arbiter):
+    """Shares act as strict priorities: every ready task of a higher-share
+    workflow precedes any task of a lower-share one; ties fall back to
+    first-appearance order. Starvation of low-priority tenants is the
+    *intended* semantics here (e.g. production vs. best-effort reruns)."""
+
+    name = "strict_priority"
+
+    def order(self, ready: List[Task], actx: ArbiterContext) -> List[Task]:
+        queues = self._workflow_queues(ready, actx)
+        queues.sort(key=lambda wq: (-actx.share_of(wq[0]),
+                                    actx.appearance.get(wq[0], 1 << 30),
+                                    wq[0]))
+        out: List[Task] = []
+        for _, q in queues:
+            out.extend(q)
+        return out
+
+
+ARBITERS: Dict[str, Callable[[], Arbiter]] = {
+    "first_appearance": FirstAppearanceArbiter,
+    "fair_share": WeightedFairShareArbiter,
+    "strict_priority": StrictPriorityArbiter,
+}
+
+
+def make_arbiter(name: str) -> Arbiter:
+    try:
+        return ARBITERS[name]()
+    except KeyError:
+        raise ValueError(
+            f"unknown arbiter {name!r}; available: {sorted(ARBITERS)}"
+        ) from None

@@ -17,10 +17,35 @@ touching either side. The verb surface follows Lehmann et al. (CCGrid'23):
   GET  /{version}/workflow/{wid}/task/{tid}/state      task state
   GET  /{version}/workflow/{wid}/state                 all task states
   PUT  /{version}/workflow/{wid}/strategy              choose strategy
+  PUT  /{version}/workflow/{wid}/share                 set fair-share weight
+  GET  /{version}/arbiter                              arbitration status
+  PUT  /{version}/arbiter                              choose arbiter policy
   GET  /{version}/provenance/task/{name}               task traces
   GET  /{version}/provenance/workflow/{wid}            workflow traces
   GET  /{version}/predict/runtime                      predicted runtime
   GET  /{version}/metrics/nodes                        node utilisation
+
+Arbitration
+-----------
+The scheduler arbitrates *between* concurrent workflows (``arbiter.py``).
+``PUT /workflow/{wid}/share`` with body ``{"share": <float >= 0>}`` sets a
+workflow's weight: under the ``fair_share`` arbiter, running-allocation
+deficits steer launches so each tenant's dominant-resource usage tracks
+its share; under ``strict_priority``, higher shares preempt the queue
+outright; the default ``first_appearance`` ignores shares and reproduces
+the pre-arbitration ordering bit-identically. Shares may be set before
+the workflow registers (tenant policy, not DAG state). ``PUT /arbiter``
+with ``{"arbiter": "fair_share" | "strict_priority" |
+"first_appearance"}`` switches the policy; ``GET /arbiter`` returns a
+status document with the active policy, shares, per-workflow
+dominant-resource usage and deficits (which sum to ~0 by construction),
+per-workflow task-state counts, and the ``arbiterRounds`` /
+``placementProbes`` / ``feasibilityChecks`` counters that the scale
+benchmark asserts against.
+
+Error envelope: every response is ``{"status": int, "body": {...}}``;
+malformed bodies are 400, unknown resources 404, and an error response
+never mutates scheduler state (the conformance suite pins this).
 """
 from __future__ import annotations
 
@@ -79,6 +104,10 @@ class CWSIServer:
 
     # routing ---------------------------------------------------------------
     def _route(self, req: _Request) -> Tuple[int, Dict[str, Any]]:
+        if req.body is not None and not isinstance(req.body, dict):
+            # valid JSON but not an object (string/array/number): every
+            # route reads the body with dict accessors, so reject once here
+            raise CWSIError(400, "request body must be a JSON object")
         parts = [p for p in req.path.split("/") if p]
         if not parts or parts[0] != CWSI_VERSION:
             raise CWSIError(400, f"unsupported CWSI version in path {req.path!r}")
@@ -97,9 +126,18 @@ class CWSIServer:
                 and parts[0] == "workflow" and parts[2] == "task"):
             wid = parts[1]
             body = req.body or {}
-            spec = TaskSpec.from_json(body["task"])
+            if not isinstance(body.get("task"), dict):
+                raise CWSIError(400, "body must carry a 'task' object")
+            try:
+                spec = TaskSpec.from_json(body["task"])
+            except (KeyError, TypeError, ValueError) as e:
+                raise CWSIError(400, f"malformed task object: {e}") from None
             spec.workflow_id = wid
-            deps = tuple(body.get("dependsOn", []))
+            raw_deps = body.get("dependsOn", [])
+            if not (isinstance(raw_deps, list)
+                    and all(isinstance(d, str) for d in raw_deps)):
+                raise CWSIError(400, "'dependsOn' must be a list of task ids")
+            deps = tuple(raw_deps)
             task = self.scheduler.submit_task(spec, deps, now=self.clock)
             self.scheduler.schedule(self.clock)
             return 200, {"taskId": task.task_id, "state": task.state.value}
@@ -128,6 +166,25 @@ class CWSIServer:
             self.scheduler.set_workflow_strategy(wid, name)
             return 200, {"workflowId": wid, "strategy": name}
 
+        if (method == "PUT" and len(parts) == 3
+                and parts[0] == "workflow" and parts[2] == "share"):
+            wid = parts[1]
+            body = req.body or {}
+            if "share" not in body:
+                raise CWSIError(400, "body must carry a 'share' number")
+            share = self.scheduler.set_workflow_share(wid, body["share"])
+            return 200, {"workflowId": wid, "share": share}
+
+        if method == "GET" and parts == ["arbiter"]:
+            return 200, self.scheduler.arbiter_status()
+
+        if method == "PUT" and parts == ["arbiter"]:
+            name = (req.body or {}).get("arbiter", "")
+            if not isinstance(name, str):
+                raise CWSIError(400, "body must carry an 'arbiter' name")
+            arb = self.scheduler.set_arbiter(name)
+            return 200, {"arbiter": arb.name}
+
         if (method == "GET" and len(parts) == 3
                 and parts[:2] == ["provenance", "task"]):
             traces = self.scheduler.provenance.traces_for_name(parts[2])
@@ -152,8 +209,14 @@ class CWSIServer:
             body = req.body or {}
             if self.scheduler.predictor is None:
                 raise CWSIError(501, "no runtime predictor installed")
+            if "name" not in body:
+                raise CWSIError(400, "body must carry a task 'name'")
+            try:
+                input_size = int(body.get("inputSize", 0))
+            except (TypeError, ValueError):
+                raise CWSIError(400, "'inputSize' must be an integer") from None
             mu, std = self.scheduler.predictor.predict(
-                body["name"], int(body.get("inputSize", 0)), body.get("node")
+                body["name"], input_size, body.get("node")
             )
             return 200, {"runtimeSeconds": mu, "stdSeconds": std}
 
@@ -203,6 +266,16 @@ class CWSIClient:
     def set_strategy(self, workflow_id: str, strategy: str) -> None:
         self._call("PUT", f"/workflow/{workflow_id}/strategy",
                    {"strategy": strategy})
+
+    def set_share(self, workflow_id: str, share: float) -> float:
+        return self._call("PUT", f"/workflow/{workflow_id}/share",
+                          {"share": share})["share"]
+
+    def set_arbiter(self, arbiter: str) -> str:
+        return self._call("PUT", "/arbiter", {"arbiter": arbiter})["arbiter"]
+
+    def arbiter_status(self) -> Dict[str, Any]:
+        return self._call("GET", "/arbiter")
 
     def task_provenance(self, task_name: str) -> List[Dict[str, Any]]:
         return self._call("GET", f"/provenance/task/{task_name}")["traces"]

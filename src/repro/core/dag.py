@@ -374,6 +374,13 @@ class WorkflowDAG:
         """Bump the data version (inputs/outputs mutated in place)."""
         self.version += 1
 
+    def state_counts(self) -> Dict[str, int]:
+        """Tasks per lifecycle state (CWSI ``GET /arbiter`` status)."""
+        counts: Dict[str, int] = {}
+        for t in self.tasks.values():
+            counts[t.state.value] = counts.get(t.state.value, 0) + 1
+        return counts
+
     def finished(self) -> bool:
         return all(t.state.terminal for t in self.tasks.values())
 

@@ -22,6 +22,13 @@ import logging
 from dataclasses import dataclass, field, replace
 from typing import Any, Callable, Dict, List, Optional, Protocol, Tuple
 
+from .arbiter import (
+    Arbiter,
+    ArbiterContext,
+    deficits as _share_deficits,
+    dominant_cost,
+    make_arbiter,
+)
 from .dag import DataRef, Task, TaskSpec, TaskState, WorkflowDAG, fresh_task_id
 from .predict import FeedbackMemoryPredictor, LotaruPredictor, NodeProfile
 from .provenance import NodeEvent, ProvenanceStore, TaskTrace
@@ -98,6 +105,7 @@ class _Allocation:
     cpus: float
     mem: int
     chips: int
+    workflow_id: str = ""
 
 
 class CommonWorkflowScheduler:
@@ -116,6 +124,7 @@ class CommonWorkflowScheduler:
         staging_bandwidth: float = 1e9,
         use_predicted_memory: bool = False,
         legacy_scan: bool = False,
+        arbiter: str | Arbiter = "first_appearance",
     ) -> None:
         self.adapter = adapter
         self.strategy: Strategy = (
@@ -149,9 +158,31 @@ class CommonWorkflowScheduler:
         self._dirty_dags: Dict[str, None] = {}
         self._queue_dirty = True
         # legacy_scan=True restores the pre-incremental full-scan rounds
-        # (benchmark baseline + determinism checks); decisions are identical.
+        # and the index-free placement walk (benchmark baseline +
+        # determinism checks); decisions are identical.
         self.legacy_scan = legacy_scan
         self.sched_rounds = 0
+        # --- inter-workflow arbitration (arbiter.py) ---
+        # the arbiter interleaves per-workflow priority lists; shares feed
+        # fair-share / strict-priority policies (CWSI PUT .../share)
+        self.arbiter: Arbiter = (
+            make_arbiter(arbiter) if isinstance(arbiter, str) else arbiter
+        )
+        self.workflow_shares: Dict[str, float] = {}
+        self.arbiter_rounds = 0
+        # --- placement feasibility index ---
+        # Ready tasks bucket by resource-demand signature
+        # (chips, cpus, mem_alloc). A bucket no up-node can fit is recorded
+        # here and skipped without re-probing until cluster capacity can
+        # have *grown* (task release / node join bumps the version); within
+        # a round capacity only shrinks, so entries stay valid across
+        # launches. This makes placement probes per round proportional to
+        # feasible work, not to the unplaceable backlog.
+        self._infeasible: Dict[Tuple[int, float, int], None] = {}
+        self._capacity_version = 0
+        self._infeasible_version = 0
+        self.placement_probes = 0      # Strategy.place invocations
+        self.feasibility_checks = 0    # demand-vs-watermark bucket checks
 
     # ------------------------------------------------------------------
     # resource-manager side: infrastructure events
@@ -163,6 +194,7 @@ class CommonWorkflowScheduler:
             mem_free=info.mem_bytes,
             chips_free=info.chips,
         )
+        self._capacity_version += 1
         self.provenance.record_node_event(NodeEvent(info.name, now, "UP"))
         if self.predictor is not None:
             self.predictor.register_node_bench(
@@ -206,6 +238,7 @@ class CommonWorkflowScheduler:
                     requeue_free=True,
                 )
         del self.nodes[name]
+        self._capacity_version += 1
         self.schedule(now)
 
     def set_node_speed(self, name: str, speed_factor: float, now: float = 0.0) -> None:
@@ -235,9 +268,15 @@ class CommonWorkflowScheduler:
     def submit_task(self, spec: TaskSpec, deps: Tuple[str, ...] = (),
                     now: float = 0.0) -> Task:
         dag = self.dags.get(spec.workflow_id)
-        if dag is None:
-            dag = self.register_workflow(spec.workflow_id)
+        pending = dag is None
+        if pending:
+            # build first, register only if the submit is valid: a rejected
+            # task must not leave a half-registered workflow behind
+            dag = WorkflowDAG(spec.workflow_id)
         task = dag.add_task(spec, deps)
+        if pending:
+            self.dags[spec.workflow_id] = dag
+            self.provenance.register_workflow(spec.workflow_id, {"name": ""})
         task.submit_time = now
         self._mark_dirty(spec.workflow_id)
         return task
@@ -256,6 +295,10 @@ class CommonWorkflowScheduler:
             for tid in [t for t, task in self._ready.items()
                         if task.spec.workflow_id == dag.workflow_id]:
                 del self._ready[tid]
+            # version-keyed caches (e.g. HEFT's rank memo) are scoped by
+            # workflow id: keep versions monotonic across the replacement
+            # so the new DAG can never collide with the old one's entries
+            dag.version = max(dag.version, old.version + 1)
         self.dags[dag.workflow_id] = dag
         self.provenance.register_workflow(dag.workflow_id, {"name": dag.name})
         for t in dag.tasks.values():
@@ -277,6 +320,84 @@ class CommonWorkflowScheduler:
     def _strategy_for(self, task: Task) -> Strategy:
         return self.workflow_strategies.get(task.spec.workflow_id, self.strategy)
 
+    # ------------------------------------------------------------------
+    # inter-workflow arbitration (CWSI: PUT .../share, GET/PUT /arbiter)
+    # ------------------------------------------------------------------
+    def set_workflow_share(self, workflow_id: str, share: float) -> float:
+        """Set a workflow's fair-share weight / strict priority.
+
+        Weights default to 1.0; zero means best-effort (ordered after all
+        positive-share ready work each round, so it only gets capacity the
+        positive-share tenants cannot use). May be set before the workflow
+        registers — shares are tenant policy, not DAG state.
+        """
+        if isinstance(share, bool) or not isinstance(share, (int, float)):
+            # no coercion: a client sending "2.5" or true has a bug the
+            # wire contract promises to surface as 400, not paper over
+            raise ValueError(f"share must be a number, got {share!r}")
+        share = float(share)
+        if not (0.0 <= share < float("inf")):
+            raise ValueError(f"share must be finite and >= 0, got {share!r}")
+        self.workflow_shares[workflow_id] = share
+        self._mark_dirty(workflow_id)
+        return share
+
+    def set_arbiter(self, arbiter: str | Arbiter) -> Arbiter:
+        """Swap the inter-workflow arbitration policy."""
+        self.arbiter = (
+            make_arbiter(arbiter) if isinstance(arbiter, str) else arbiter
+        )
+        return self.arbiter
+
+    def _cluster_totals(self) -> Dict[str, float]:
+        up = [st.info for st in self.nodes.values() if st.up]
+        return {
+            "cpus": sum(i.cpus for i in up),
+            "mem": float(sum(i.mem_bytes for i in up)),
+            "chips": float(sum(i.chips for i in up)),
+        }
+
+    def _workflow_usage(
+        self, totals: Optional[Dict[str, float]] = None
+    ) -> Dict[str, float]:
+        """Dominant-resource usage of *running allocations*, per workflow."""
+        if totals is None:
+            totals = self._cluster_totals()
+        usage: Dict[str, float] = {}
+        for alloc in self.allocations.values():
+            cost = dominant_cost(alloc.cpus, alloc.mem, alloc.chips, totals)
+            usage[alloc.workflow_id] = usage.get(alloc.workflow_id, 0.0) + cost
+        return usage
+
+    def _arbiter_context(self, ctx: SchedulingContext) -> ArbiterContext:
+        return ArbiterContext(
+            ctx=ctx,
+            strategy_for=self._strategy_for,
+            single_strategy=None if self.workflow_strategies else self.strategy,
+            shares=self.workflow_shares,
+            appearance_fn=lambda: {wid: i for i, wid in enumerate(self.dags)},
+            usage_fn=self._workflow_usage,
+            totals_fn=self._cluster_totals,
+        )
+
+    def arbiter_status(self) -> Dict[str, Any]:
+        """Status document for the CWSI ``GET /arbiter`` endpoint."""
+        usage = self._workflow_usage(self._cluster_totals())
+        active = [wid for wid, dag in self.dags.items() if not dag.finished()]
+        return {
+            "arbiter": self.arbiter.name,
+            "shares": dict(self.workflow_shares),
+            "usage": usage,
+            "deficits": _share_deficits(self.workflow_shares, usage, active),
+            "arbiterRounds": self.arbiter_rounds,
+            "placementProbes": self.placement_probes,
+            "feasibilityChecks": self.feasibility_checks,
+            "infeasibleBuckets": len(self._infeasible),
+            "workflows": {
+                wid: dag.state_counts() for wid, dag in self.dags.items()
+            },
+        }
+
     def _mark_dirty(self, workflow_id: str) -> None:
         self._queue_dirty = True
         self._dirty_dags[workflow_id] = None
@@ -294,12 +415,26 @@ class CommonWorkflowScheduler:
         task = self._find_task(task_id)
         if task is None:
             return
+        if task.state != TaskState.SCHEDULED:
+            # only a scheduled launch may start. Anything else is a late
+            # or duplicate report racing a kill: a settled task, a killed
+            # speculative copy, or a node-loss-requeued READY task whose
+            # old launch's start arrives after the requeue — none may be
+            # flipped to RUNNING or have start_time clobbered.
+            return
         task.state = TaskState.RUNNING
         task.start_time = now
 
     def on_task_finished(self, task_id: str, now: float, result: TaskResult) -> None:
         task = self._find_task(task_id)
         if task is None:
+            return
+        if task_id not in self.spec_copies and task.state.terminal:
+            # duplicate/late completion report (e.g. a kill racing a real
+            # resource manager's finish): the task is settled. The old
+            # full-scan engine re-derived readiness from parent states so
+            # this was harmless; the counter-based path must not let it
+            # double-decrement children's unmet counts.
             return
         task.end_time = now
         self._release(task_id)
@@ -355,35 +490,46 @@ class CommonWorkflowScheduler:
         if not ready:
             return 0
         ctx = self._context(now)
-        ordered: List[Task] = []
-        if not self.workflow_strategies:
-            ordered = self.strategy.prioritize(ready, ctx)
-        else:
-            # group by effective strategy (first-appearance order); each
-            # group is prioritized by its own strategy
-            groups: List[Tuple[Strategy, List[Task]]] = []
-            index: Dict[int, int] = {}
-            for task in ready:
-                strat = self._strategy_for(task)
-                i = index.get(id(strat))
-                if i is None:
-                    index[id(strat)] = len(groups)
-                    groups.append((strat, [task]))
-                else:
-                    groups[i][1].append(task)
-            for strat, group in groups:
-                ordered.extend(strat.prioritize(group, ctx))
+        # the arbiter interleaves per-workflow priority lists; the default
+        # FirstAppearanceArbiter reproduces the pre-arbitration order
+        # bit-identically (golden-trace suite pins this)
+        self.arbiter_rounds += 1
+        ordered = self.arbiter.order(ready, self._arbiter_context(ctx))
         launched = 0
         # node views only change when a launch consumes resources, so one
         # snapshot serves every unplaced task in between
         views: Optional[List[NodeView]] = None
+        # memory caps at the largest up-node, constant within a round
+        mem_cap = max((st.info.mem_bytes for st in self.nodes.values()
+                       if st.up), default=0)
+        # placement feasibility index: infeasible demand buckets persist
+        # until capacity can have grown (see __init__); feasible marks are
+        # only valid for the current views snapshot
+        if self._infeasible_version != self._capacity_version:
+            self._infeasible.clear()
+            self._infeasible_version = self._capacity_version
+        feasible: set = set()
         for task in ordered:
             if views is None:
                 views = [st.view() for st in self.nodes.values() if st.up]
+                feasible = set()
             if not views:
                 break
-            mem_alloc = self._memory_for(task)
-            if mem_alloc == task.spec.resources.mem_bytes:
+            mem_alloc = self._memory_for(task, mem_cap)
+            res = task.spec.resources
+            if not self.legacy_scan:
+                key = (res.chips, res.cpus, mem_alloc)
+                if key in self._infeasible:
+                    continue
+                if key not in feasible:
+                    self.feasibility_checks += 1
+                    if any(v.fits_demand(res.cpus, mem_alloc, res.chips)
+                           for v in views):
+                        feasible.add(key)
+                    else:
+                        self._infeasible[key] = None
+                        continue
+            if mem_alloc == res.mem_bytes:
                 probe = task
             else:
                 # strategies check fit against the *requested* allocation
@@ -391,6 +537,7 @@ class CommonWorkflowScheduler:
                     task.spec.resources, mem_bytes=mem_alloc))
                 probe = Task(spec=eff, state=task.state,
                              submit_time=task.submit_time)
+            self.placement_probes += 1
             node = self._strategy_for(task).place(probe, views, ctx)
             if node is None:
                 continue
@@ -401,7 +548,7 @@ class CommonWorkflowScheduler:
             self.check_speculation(now)
         return launched
 
-    def _memory_for(self, task: Task) -> int:
+    def _memory_for(self, task: Task, cap: Optional[int] = None) -> int:
         req = task.spec.resources.mem_bytes
         if self.mem_predictor is None or not self.use_predicted_memory:
             # paper retry rule even without the predictor: double on OOM
@@ -412,8 +559,12 @@ class CommonWorkflowScheduler:
             )
         # never request more than the largest node can offer — a doubled
         # retry beyond cluster capacity would sit unschedulable forever
-        cap = max((st.info.mem_bytes for st in self.nodes.values() if st.up),
-                  default=alloc)
+        # (callers inside a round pass the hoisted per-round cap)
+        if cap is None:
+            cap = max((st.info.mem_bytes for st in self.nodes.values()
+                       if st.up), default=alloc)
+        elif cap <= 0:
+            cap = alloc
         return min(alloc, cap)
 
     def _launch(self, task: Task, node: str, mem_alloc: int, now: float) -> None:
@@ -423,7 +574,8 @@ class CommonWorkflowScheduler:
         st.cpus_free -= cpus
         st.mem_free -= mem_alloc
         st.chips_free -= res.chips
-        self.allocations[task.task_id] = _Allocation(node, cpus, mem_alloc, res.chips)
+        self.allocations[task.task_id] = _Allocation(
+            node, cpus, mem_alloc, res.chips, task.spec.workflow_id)
         self.mem_allocated[task.task_id] = mem_alloc
         self._ready.pop(task.task_id, None)
         task.state = TaskState.SCHEDULED
@@ -443,6 +595,8 @@ class CommonWorkflowScheduler:
             st.cpus_free = min(st.cpus_free + alloc.cpus, st.info.cpus)
             st.mem_free = min(st.mem_free + alloc.mem, st.info.mem_bytes)
             st.chips_free = min(st.chips_free + alloc.chips, st.info.chips)
+        # capacity grew: previously-infeasible demand buckets may now fit
+        self._capacity_version += 1
 
     # ------------------------------------------------------------------
     # completion paths
@@ -470,6 +624,10 @@ class CommonWorkflowScheduler:
 
     def _finish_success(self, task: Task, now: float, result: TaskResult) -> None:
         task.state = TaskState.SUCCEEDED
+        # a task can be credited by a winning speculative copy while its
+        # requeued original still sits READY and unplaced — drop it from
+        # the queue or it would be launched again after succeeding
+        self._ready.pop(task.task_id, None)
         self._record(task, "SUCCEEDED", result)
         self.mem_allocated.pop(task.task_id, None)
         # outputs become resident on the executing node (data locality)
@@ -512,8 +670,7 @@ class CommonWorkflowScheduler:
         for child_id in dag.children[task.task_id]:
             child = dag.tasks[child_id]
             child.spec.inputs = tuple(
-                outs.get(i.name, i) if i.name in outs else i
-                for i in child.spec.inputs
+                outs.get(i.name, i) for i in child.spec.inputs
             )
         # input specs changed in place: invalidate strategy memos
         dag.touch()
@@ -621,10 +778,14 @@ class CommonWorkflowScheduler:
             "workflow_strategies": {
                 w: s.name for w, s in self.workflow_strategies.items()
             },
+            "arbiter": self.arbiter.name,
+            "workflow_shares": dict(self.workflow_shares),
             "nodes": {n: s.up for n, s in self.nodes.items()},
             "workflows": {w: d.finished() for w, d in self.dags.items()},
             "running": len(self.allocations),
             "ready": len(self._ready),
+            "placement_probes": self.placement_probes,
+            "arbiter_rounds": self.arbiter_rounds,
         }
 
     def op_counts(self) -> Dict[str, int]:
@@ -633,4 +794,7 @@ class CommonWorkflowScheduler:
             "rounds": self.sched_rounds,
             "readiness_ops": sum(d.readiness_ops for d in self.dags.values()),
             "rank_ops": sum(d.rank_ops for d in self.dags.values()),
+            "placement_probes": self.placement_probes,
+            "feasibility_checks": self.feasibility_checks,
+            "arbiter_rounds": self.arbiter_rounds,
         }

@@ -47,9 +47,13 @@ class NodeView:
     def fits(self, task: Task, mem_alloc: Optional[int] = None) -> bool:
         res = task.spec.resources
         mem = mem_alloc if mem_alloc is not None else res.mem_bytes
-        if res.chips > 0:
-            return self.chips_free >= res.chips and self.mem_free >= mem
-        return self.cpus_free >= res.cpus and self.mem_free >= mem
+        return self.fits_demand(res.cpus, mem, res.chips)
+
+    def fits_demand(self, cpus: float, mem: int, chips: int) -> bool:
+        """Raw demand-signature fit (the placement index's watermark test)."""
+        if chips > 0:
+            return self.chips_free >= chips and self.mem_free >= mem
+        return self.cpus_free >= cpus and self.mem_free >= mem
 
 
 @dataclass
@@ -94,23 +98,33 @@ def _fitting(task: Task, nodes: Sequence[NodeView]) -> List[NodeView]:
 class _RoundRobinPlacer:
     """Stateful round-robin over node names (the paper's 'Round Robin'):
     a persistent pointer walks a fixed node ring and advances to the next
-    node that fits — stable under churn in the fitting set."""
+    node that fits — stable under churn in the fitting set.
+
+    The ring is persistent: it is re-sorted only when the node *membership*
+    actually changes (detected by a cheap length + set-lookup scan, so node
+    add/remove is the only event that pays the sort), not on every ``pick``
+    as the pre-index placer did. The resync applies ``ptr %= len`` exactly
+    when the old lazy re-sort would have, keeping decisions bit-identical
+    under node churn. Fit checks walk the ring lazily from the pointer, so
+    a pick usually costs O(1) fits instead of O(nodes)."""
 
     def __init__(self) -> None:
         self._ring: List[str] = []
+        self._members: frozenset = frozenset()
         self._ptr = 0
 
     def pick(self, task: Task, nodes: Sequence[NodeView]) -> Optional[str]:
-        names = sorted(n.name for n in nodes)
-        if names != self._ring:
-            self._ring = names
-            self._ptr %= max(len(names), 1)
-        fit = {n.name for n in _fitting(task, nodes)}
-        if not fit:
+        if len(nodes) != len(self._ring) or any(
+                n.name not in self._members for n in nodes):
+            self._ring = sorted(n.name for n in nodes)
+            self._members = frozenset(self._ring)
+            self._ptr %= max(len(self._ring), 1)
+        if not self._ring:
             return None
+        by_name = {n.name: n for n in nodes}
         for i in range(len(self._ring)):
             cand = self._ring[(self._ptr + i) % len(self._ring)]
-            if cand in fit:
+            if by_name[cand].fits(task):
                 self._ptr = (self._ptr + i + 1) % len(self._ring)
                 return cand
         return None

@@ -1,0 +1,461 @@
+"""Inter-workflow arbitration + placement feasibility index tests.
+
+Deterministic (seeded-numpy) versions of the arbiter invariants — the
+hypothesis twins live in ``test_arbiter_properties.py`` and deepen the
+same claims when hypothesis is installed:
+
+  * the default ``first_appearance`` arbiter is bit-identical to the PR 1
+    inline ordering logic (reference reimplementation below),
+  * weighted fair share emits in share proportion and compensates
+    pre-existing running usage,
+  * strict priority is total: every high-share task precedes any low-share
+    one,
+  * deficits sum to ~0 (share conservation),
+  * the placement feasibility index skips unplaceable demand buckets
+    without changing a single decision, and invalidates on capacity growth
+    (task release / node join),
+  * the persistent round-robin ring behaves exactly like the per-call-sort
+    placer it replaced, under node churn.
+"""
+import numpy as np
+import pytest
+
+from repro.cluster import (
+    ClusterSimulator,
+    SimConfig,
+    build_workflow,
+    heterogeneous_cluster,
+    run_workflows,
+)
+from repro.core import (
+    ArbiterContext,
+    CommonWorkflowScheduler,
+    DataRef,
+    FirstAppearanceArbiter,
+    NodeInfo,
+    NodeView,
+    ProvenanceStore,
+    Resources,
+    SchedulingContext,
+    StrictPriorityArbiter,
+    TaskSpec,
+    TaskState,
+    WeightedFairShareArbiter,
+    WorkflowDAG,
+    deficits,
+    make_arbiter,
+    make_strategy,
+)
+from repro.core.strategies import _RoundRobinPlacer
+
+GiB = 1 << 30
+
+
+# ---------------------------------------------------------------------------
+# helpers: synthetic ready sets + arbiter contexts
+# ---------------------------------------------------------------------------
+def _ready_set(rng, n_wf=3, n_tasks=40, uniform_resources=False):
+    dags = {f"wf{w}": WorkflowDAG(f"wf{w}") for w in range(n_wf)}
+    ready = []
+    for i in range(n_tasks):
+        wid = f"wf{int(rng.integers(0, n_wf))}"
+        res = (Resources(cpus=2.0, mem_bytes=2 * GiB) if uniform_resources
+               else Resources(cpus=float(rng.choice([1, 2, 4])),
+                              mem_bytes=int(rng.integers(1, 8)) * GiB))
+        spec = TaskSpec(
+            task_id=f"{wid}.t{i}", name=f"kind{i % 4}", workflow_id=wid,
+            inputs=(DataRef(f"d{i}", int(rng.integers(0, 4 * GiB))),),
+            resources=res,
+        )
+        task = dags[wid].add_task(spec)
+        task.state = TaskState.READY
+        task.ready_time = float(rng.uniform(0, 100))
+        ready.append(task)
+    return dags, ready
+
+
+def _actx(dags, strategy_for, single_strategy=None, shares=None, usage=None,
+          totals=None):
+    return ArbiterContext(
+        ctx=SchedulingContext(dags=dags, provenance=ProvenanceStore()),
+        strategy_for=strategy_for,
+        single_strategy=single_strategy,
+        shares=shares or {},
+        appearance_fn=lambda: {wid: i for i, wid in enumerate(dags)},
+        usage_fn=lambda totals: dict(usage or {}),
+        totals_fn=lambda: dict(totals or {"cpus": 32.0, "mem": float(64 * GiB),
+                                          "chips": 0.0}),
+    )
+
+
+def _reference_first_appearance(ready, ctx, strategy_for, single_strategy):
+    """The PR 1 inline ordering logic, verbatim (the arbiter must match)."""
+    if single_strategy is not None:
+        return single_strategy.prioritize(ready, ctx)
+    ordered, groups, index = [], [], {}
+    for task in ready:
+        strat = strategy_for(task)
+        i = index.get(id(strat))
+        if i is None:
+            index[id(strat)] = len(groups)
+            groups.append((strat, [task]))
+        else:
+            groups[i][1].append(task)
+    for strat, group in groups:
+        ordered.extend(strat.prioritize(group, ctx))
+    return ordered
+
+
+# ---------------------------------------------------------------------------
+# first-appearance: arbiter off == PR 1 ordering, bit-identically
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("seed", range(5))
+def test_first_appearance_matches_reference_single_strategy(seed):
+    rng = np.random.default_rng(seed)
+    dags, ready = _ready_set(rng)
+    strat = make_strategy("rank_min_rr")
+    a = _actx(dags, lambda t: strat, single_strategy=strat)
+    got = FirstAppearanceArbiter().order(list(ready), a)
+    want = _reference_first_appearance(list(ready), a.ctx, lambda t: strat,
+                                       strat)
+    assert [t.task_id for t in got] == [t.task_id for t in want]
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_first_appearance_matches_reference_with_overrides(seed):
+    rng = np.random.default_rng(seed)
+    dags, ready = _ready_set(rng)
+    default = make_strategy("rank_min_rr")
+    override = make_strategy("original")
+    overrides = {"wf1": override}
+
+    def strategy_for(task):
+        return overrides.get(task.spec.workflow_id, default)
+
+    a = _actx(dags, strategy_for, single_strategy=None)
+    got = FirstAppearanceArbiter().order(list(ready), a)
+    want = _reference_first_appearance(list(ready), a.ctx, strategy_for, None)
+    assert [t.task_id for t in got] == [t.task_id for t in want]
+
+
+# ---------------------------------------------------------------------------
+# weighted fair share
+# ---------------------------------------------------------------------------
+def test_fair_share_emits_in_share_proportion():
+    rng = np.random.default_rng(7)
+    dags, ready = _ready_set(rng, n_wf=2, n_tasks=80, uniform_resources=True)
+    strat = make_strategy("fifo_rr")
+    a = _actx(dags, lambda t: strat, single_strategy=strat,
+              shares={"wf0": 1.0, "wf1": 3.0})
+    out = WeightedFairShareArbiter().order(list(ready), a)
+    # in any prefix long enough to smooth rounding, wf1 holds ~3/4 of slots
+    prefix = out[:32]
+    n1 = sum(1 for t in prefix if t.spec.workflow_id == "wf1")
+    assert 20 <= n1 <= 28, n1
+    # intra-workflow order is the strategy's own (subsequence property)
+    for wid in dags:
+        mine = [t.task_id for t in out if t.spec.workflow_id == wid]
+        want = [t.task_id for t in strat.prioritize(
+            [t for t in ready if t.spec.workflow_id == wid], a.ctx)]
+        assert mine == want
+
+
+def test_fair_share_compensates_running_usage():
+    rng = np.random.default_rng(11)
+    dags, ready = _ready_set(rng, n_wf=2, n_tasks=40, uniform_resources=True)
+    strat = make_strategy("fifo_rr")
+    # wf0 already hogs the cluster: wf1 must be serviced first until even.
+    # Each task's dominant cost is max(2/32 cpus, 2/64 GiB) = 0.0625, so a
+    # 0.5 head start is worth 0.5/0.0625 = 8 catch-up emissions for wf1.
+    a = _actx(dags, lambda t: strat, single_strategy=strat,
+              shares={"wf0": 1.0, "wf1": 1.0}, usage={"wf0": 0.5, "wf1": 0.0})
+    out = WeightedFairShareArbiter().order(list(ready), a)
+    head = out[:8]
+    assert all(t.spec.workflow_id == "wf1" for t in head), \
+        [t.task_id for t in head]
+
+
+def test_fair_share_zero_share_is_best_effort():
+    rng = np.random.default_rng(13)
+    dags, ready = _ready_set(rng, n_wf=2, n_tasks=30, uniform_resources=True)
+    strat = make_strategy("fifo_rr")
+    a = _actx(dags, lambda t: strat, single_strategy=strat,
+              shares={"wf0": 0.0, "wf1": 1.0})
+    out = WeightedFairShareArbiter().order(list(ready), a)
+    # wf1 (positive share) fully precedes the best-effort wf0 backlog
+    ids_wf1 = [i for i, t in enumerate(out) if t.spec.workflow_id == "wf1"]
+    ids_wf0 = [i for i, t in enumerate(out) if t.spec.workflow_id == "wf0"]
+    assert max(ids_wf1) < min(ids_wf0)
+
+
+def test_zero_share_never_preempts_positive_share():
+    """A positive share is a strictly higher tier: even a vanishingly
+    small share with huge accumulated usage outranks best-effort."""
+    rng = np.random.default_rng(19)
+    dags, ready = _ready_set(rng, n_wf=2, n_tasks=20, uniform_resources=True)
+    strat = make_strategy("fifo_rr")
+    a = _actx(dags, lambda t: strat, single_strategy=strat,
+              shares={"wf0": 1e-19, "wf1": 0.0}, usage={"wf0": 0.5})
+    out = WeightedFairShareArbiter().order(list(ready), a)
+    ids_wf0 = [i for i, t in enumerate(out) if t.spec.workflow_id == "wf0"]
+    ids_wf1 = [i for i, t in enumerate(out) if t.spec.workflow_id == "wf1"]
+    assert max(ids_wf0) < min(ids_wf1)
+
+
+def test_run_workflows_warns_on_noop_shares():
+    dag = build_workflow("viralrecon", seed=1, n_samples=2)
+    with pytest.warns(UserWarning, match="first_appearance"):
+        ms, _ = run_workflows([dag], heterogeneous_cluster(2),
+                              shares={dag.workflow_id: 2.0})
+    assert ms[dag.workflow_id] > 0         # still runs, shares ignored
+
+
+def test_strict_priority_is_total():
+    rng = np.random.default_rng(17)
+    dags, ready = _ready_set(rng, n_wf=3, n_tasks=45)
+    strat = make_strategy("rank_min_rr")
+    a = _actx(dags, lambda t: strat, single_strategy=strat,
+              shares={"wf0": 1.0, "wf1": 5.0, "wf2": 3.0})
+    out = StrictPriorityArbiter().order(list(ready), a)
+    pos = {wid: [i for i, t in enumerate(out)
+                 if t.spec.workflow_id == wid] for wid in dags}
+    for hi, lo in (("wf1", "wf2"), ("wf2", "wf0")):
+        if pos[hi] and pos[lo]:
+            assert max(pos[hi]) < min(pos[lo])
+
+
+def test_arbiter_order_is_a_permutation():
+    rng = np.random.default_rng(23)
+    dags, ready = _ready_set(rng, n_wf=4, n_tasks=60)
+    strat = make_strategy("rank_min_rr")
+    for name in ("first_appearance", "fair_share", "strict_priority"):
+        a = _actx(dags, lambda t: strat, single_strategy=strat,
+                  shares={"wf0": 2.0, "wf2": 0.5})
+        out = make_arbiter(name).order(list(ready), a)
+        assert sorted(t.task_id for t in out) == \
+            sorted(t.task_id for t in ready), name
+
+
+def test_deficits_sum_to_zero():
+    rng = np.random.default_rng(29)
+    for _ in range(20):
+        wids = [f"w{i}" for i in range(int(rng.integers(1, 8)))]
+        shares = {w: float(rng.uniform(0, 4)) for w in wids
+                  if rng.random() < 0.7}
+        usage = {w: float(rng.uniform(0, 1)) for w in wids
+                 if rng.random() < 0.8}
+        d = deficits(shares, usage, wids)
+        assert abs(sum(d.values())) < 1e-9
+        assert set(d) == set(wids)
+
+
+# ---------------------------------------------------------------------------
+# scheduler-level: fair share across concurrent tenants, no starvation
+# ---------------------------------------------------------------------------
+def test_fair_share_end_to_end_tracks_shares():
+    """3 identical concurrent workflows with shares 1/2/4 on a small
+    cluster: sampled running usage must order by share, and everyone
+    finishes (no starvation)."""
+    dags = [build_workflow("viralrecon", seed=5, workflow_id=f"wf{i}",
+                           n_samples=4) for i in range(3)]
+    shares = {"wf0": 1.0, "wf1": 2.0, "wf2": 4.0}
+    sim = ClusterSimulator(heterogeneous_cluster(3), SimConfig(seed=3))
+    cws = CommonWorkflowScheduler(adapter=sim, strategy="rank_min_rr",
+                                  arbiter="fair_share")
+    for wid, s in shares.items():
+        cws.set_workflow_share(wid, s)
+    sim.attach(cws)
+    samples = []
+    inner = cws.schedule
+
+    def sampling_schedule(now):
+        n = inner(now)
+        if all(not d.finished() for d in dags) and cws._ready:
+            samples.append(cws._workflow_usage())
+        return n
+
+    cws.schedule = sampling_schedule
+    for d in dags:
+        sim.submit_workflow_at(0.0, d)
+    sim.run()
+    assert all(d.succeeded() for d in dags)
+    assert len(samples) > 10
+    mean = {w: float(np.mean([s.get(w, 0.0) for s in samples]))
+            for w in shares}
+    assert mean["wf2"] > mean["wf1"] > mean["wf0"] > 0.0, mean
+
+
+def test_all_arbiters_complete_and_match_first_appearance_when_trivial():
+    """With a single workflow there is nothing to arbitrate: every arbiter
+    must produce the identical schedule (bit-identical makespan)."""
+    spans = {}
+    for name in ("first_appearance", "fair_share", "strict_priority"):
+        dag = build_workflow("chipseq", seed=2, n_samples=3)
+        ms, cws = run_workflows([dag], heterogeneous_cluster(4),
+                                "rank_min_rr", SimConfig(seed=2),
+                                arbiter=name)
+        assert dag.succeeded()
+        spans[name] = ms[dag.workflow_id]
+    assert len(set(spans.values())) == 1, spans
+
+
+def test_no_starvation_under_fair_share():
+    """A tiny share-1 tenant next to a share-8 flood still completes, and
+    completes while the flood is still running (it was serviced, not
+    parked behind the big tenant)."""
+    flood = build_workflow("rnaseq", seed=6, workflow_id="flood",
+                           n_samples=12)
+    small = build_workflow("viralrecon", seed=7, workflow_id="small",
+                           n_samples=2)
+    ms, cws = run_workflows(
+        [flood, small], heterogeneous_cluster(3), "rank_min_rr",
+        SimConfig(seed=4), shares={"flood": 8.0, "small": 1.0},
+        arbiter="fair_share")
+    assert flood.succeeded() and small.succeeded()
+    flood_end = max(t.end_time for t in flood.tasks.values())
+    small_end = max(t.end_time for t in small.tasks.values())
+    assert small_end < flood_end
+
+
+# ---------------------------------------------------------------------------
+# placement feasibility index
+# ---------------------------------------------------------------------------
+class _NullAdapter:
+    def launch(self, task, node, mem_alloc):
+        pass
+
+    def kill(self, task_id):
+        pass
+
+
+def _backlog_rig(arbiter="first_appearance"):
+    """One 8-GiB node + a backlog of 4-GiB tasks: two run, many wait."""
+    cws = CommonWorkflowScheduler(adapter=_NullAdapter(),
+                                  strategy="rank_min_rr", arbiter=arbiter)
+    cws.add_node(NodeInfo("n0", cpus=16, mem_bytes=8 * GiB), now=0.0)
+    dag = WorkflowDAG("w")
+    for i in range(30):
+        dag.add_task(TaskSpec(task_id=f"w.t{i}", name="p",
+                              resources=Resources(cpus=1.0,
+                                                  mem_bytes=4 * GiB)))
+    cws.submit_workflow(dag, now=0.0)
+    return cws, dag
+
+
+def test_index_skips_unplaceable_backlog_without_changing_decisions():
+    cws, dag = _backlog_rig()
+    assert len(cws.allocations) == 2            # node fits exactly two
+    probes_after_submit = cws.placement_probes
+    # an idle round over the 28-task backlog: the demand bucket is already
+    # known-infeasible, so zero probes and zero fresh feasibility checks
+    cws.schedule(1.0)
+    assert cws.placement_probes == probes_after_submit
+    assert len(cws._infeasible) == 1
+    # releasing one task invalidates the watermark; exactly one successor
+    # launches, costing O(1) probes — not O(backlog)
+    from repro.core.scheduler import TaskResult
+    cws.on_task_finished("w.t0", now=2.0, result=TaskResult(True))
+    assert len(cws.allocations) == 2
+    assert cws.placement_probes <= probes_after_submit + 2
+
+
+def test_index_matches_legacy_probe_everything_decisions():
+    """Same seeds, legacy (probe-everything) vs indexed placement: the
+    makespans and launch orders must be identical, with far fewer probes."""
+    traces = {}
+    probes = {}
+    for legacy in (False, True):
+        dag = build_workflow("rnaseq", seed=8, n_samples=10)
+        sim = ClusterSimulator(heterogeneous_cluster(2), SimConfig(seed=8))
+        cws = CommonWorkflowScheduler(adapter=sim, strategy="rank_min_rr",
+                                      legacy_scan=legacy)
+        sim.attach(cws)
+        sim.submit_workflow_at(0.0, dag)
+        sim.run()
+        assert dag.succeeded()
+        traces[legacy] = [
+            (t.task_id, t.node, round(t.start_time, 9))
+            for t in sorted(dag.tasks.values(), key=lambda t: t.task_id)
+        ]
+        probes[legacy] = cws.placement_probes
+    assert traces[False] == traces[True]
+    assert probes[False] * 3 <= probes[True], probes
+
+
+def test_infeasible_bucket_cleared_on_node_join():
+    cws = CommonWorkflowScheduler(adapter=_NullAdapter())
+    cws.add_node(NodeInfo("small", cpus=4, mem_bytes=4 * GiB), now=0.0)
+    dag = WorkflowDAG("w")
+    # infeasible by cpu (memory requests clamp to the largest node, cpus
+    # do not) — no current node can ever host it
+    dag.add_task(TaskSpec(task_id="w.big", name="p",
+                          resources=Resources(cpus=6.0, mem_bytes=2 * GiB)))
+    cws.submit_workflow(dag, now=0.0)
+    assert dag.task("w.big").state == TaskState.READY
+    assert len(cws._infeasible) == 1
+    cws.add_node(NodeInfo("big", cpus=8, mem_bytes=32 * GiB), now=1.0)
+    assert dag.task("w.big").state == TaskState.SCHEDULED
+    assert cws.allocations["w.big"].node == "big"
+
+
+def test_share_validation():
+    cws = CommonWorkflowScheduler(adapter=_NullAdapter())
+    assert cws.set_workflow_share("w", 2) == 2.0
+    assert cws.set_workflow_share("w", 0) == 0.0
+    for bad in (-1, float("nan"), float("inf"), "many", "2.5", True, None):
+        with pytest.raises(ValueError):
+            cws.set_workflow_share("w", bad)
+    assert cws.workflow_shares["w"] == 0.0      # failed sets did not stick
+    with pytest.raises(ValueError):
+        cws.set_arbiter("not-an-arbiter")
+    assert cws.arbiter.name == "first_appearance"
+
+
+# ---------------------------------------------------------------------------
+# persistent round-robin ring == legacy per-call-sort placer
+# ---------------------------------------------------------------------------
+class _LegacyRoundRobinPlacer:
+    """The pre-refactor placer, kept verbatim as the behavioural oracle."""
+
+    def __init__(self):
+        self._ring = []
+        self._ptr = 0
+
+    def pick(self, task, nodes):
+        names = sorted(n.name for n in nodes)
+        if names != self._ring:
+            self._ring = names
+            self._ptr %= max(len(names), 1)
+        fit = {n.name for n in nodes if n.fits(task)}
+        if not fit:
+            return None
+        for i in range(len(self._ring)):
+            cand = self._ring[(self._ptr + i) % len(self._ring)]
+            if cand in fit:
+                self._ptr = (self._ptr + i + 1) % len(self._ring)
+                return cand
+        return None
+
+
+def test_persistent_ring_matches_legacy_under_churn():
+    rng = np.random.default_rng(31)
+    new, old = _RoundRobinPlacer(), _LegacyRoundRobinPlacer()
+    pool = [f"n{i}" for i in range(9)]
+    live = set(pool[:4])
+    task_small = WorkflowDAG("w").add_task(TaskSpec(
+        task_id="w.s", name="p", resources=Resources(cpus=1, mem_bytes=GiB)))
+    task_big = WorkflowDAG("w2").add_task(TaskSpec(
+        task_id="w2.b", name="p",
+        resources=Resources(cpus=32, mem_bytes=GiB)))
+    for step in range(400):
+        r = rng.random()
+        if r < 0.15 and len(live) < len(pool):
+            live.add(rng.choice([n for n in pool if n not in live]))
+        elif r < 0.3 and len(live) > 1:
+            live.remove(rng.choice(sorted(live)))
+        views = [NodeView(name=n, cpus_total=8, mem_total=8 * GiB,
+                          cpus_free=float(rng.integers(0, 9)),
+                          mem_free=8 * GiB)
+                 for n in sorted(live)]
+        task = task_big if rng.random() < 0.2 else task_small
+        assert new.pick(task, views) == old.pick(task, views), step

@@ -1,0 +1,150 @@
+"""Property-based tests (hypothesis) for inter-workflow arbitration.
+
+Deterministic seeded twins of these invariants run unconditionally in
+``test_arbiter.py``; this module drives the same claims over randomly
+drawn ready sets, shares, and usage vectors:
+
+  * **arbiter off == first appearance**: the default arbiter's order is
+    bit-identical to the PR 1 inline grouping logic for any ready set,
+  * **permutation**: every arbiter emits each ready task exactly once,
+  * **no starvation**: every workflow with a nonzero share and ready
+    tasks appears within the first ``(W / min_share_fraction) + W`` slots,
+    and eventually in full,
+  * **share conservation**: fair-share deficits sum to ~0 for any share /
+    usage combination.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property-based suite needs hypothesis (pip install -r requirements-dev.txt)",
+)
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import (
+    ArbiterContext,
+    DataRef,
+    FirstAppearanceArbiter,
+    ProvenanceStore,
+    Resources,
+    SchedulingContext,
+    StrictPriorityArbiter,
+    TaskSpec,
+    TaskState,
+    WeightedFairShareArbiter,
+    WorkflowDAG,
+    deficits,
+    make_strategy,
+)
+
+GiB = 1 << 30
+
+
+@st.composite
+def ready_and_shares(draw):
+    n_wf = draw(st.integers(1, 5))
+    n_tasks = draw(st.integers(1, 40))
+    rng = np.random.default_rng(draw(st.integers(0, 2 ** 31)))
+    dags = {f"wf{w}": WorkflowDAG(f"wf{w}") for w in range(n_wf)}
+    ready = []
+    for i in range(n_tasks):
+        wid = f"wf{int(rng.integers(0, n_wf))}"
+        spec = TaskSpec(
+            task_id=f"{wid}.t{i}", name=f"kind{i % 3}", workflow_id=wid,
+            inputs=(DataRef(f"d{i}", int(rng.uniform(0, 2) * GiB)),),
+            resources=Resources(cpus=float(rng.choice([1, 2, 4])),
+                                mem_bytes=int(rng.integers(1, 8)) * GiB),
+        )
+        task = dags[wid].add_task(spec)
+        task.state = TaskState.READY
+        task.ready_time = float(rng.uniform(0, 50))
+        ready.append(task)
+    shares = {
+        wid: float(draw(st.floats(0.1, 8.0, allow_nan=False)))
+        for wid in dags if draw(st.booleans())
+    }
+    usage = {wid: float(rng.uniform(0, 0.6)) for wid in dags
+             if rng.random() < 0.5}
+    return dags, ready, shares, usage
+
+
+def _actx(dags, strat, shares, usage):
+    return ArbiterContext(
+        ctx=SchedulingContext(dags=dags, provenance=ProvenanceStore()),
+        strategy_for=lambda t: strat,
+        single_strategy=strat,
+        shares=shares,
+        appearance_fn=lambda: {wid: i for i, wid in enumerate(dags)},
+        usage_fn=lambda totals: dict(usage),
+        totals_fn=lambda: {"cpus": 64.0, "mem": float(128 * GiB),
+                           "chips": 0.0},
+    )
+
+
+@settings(max_examples=30, deadline=None)
+@given(data=ready_and_shares())
+def test_first_appearance_is_bit_identical_to_arbiter_off(data):
+    dags, ready, shares, usage = data
+    strat = make_strategy("rank_min_rr")
+    a = _actx(dags, strat, shares, usage)
+    got = [t.task_id for t in FirstAppearanceArbiter().order(list(ready), a)]
+    want = [t.task_id for t in strat.prioritize(list(ready), a.ctx)]
+    assert got == want
+
+
+@settings(max_examples=30, deadline=None)
+@given(data=ready_and_shares())
+def test_every_arbiter_emits_a_permutation(data):
+    dags, ready, shares, usage = data
+    strat = make_strategy("rank_min_rr")
+    for arb in (FirstAppearanceArbiter(), WeightedFairShareArbiter(),
+                StrictPriorityArbiter()):
+        a = _actx(dags, strat, shares, usage)
+        out = arb.order(list(ready), a)
+        assert sorted(t.task_id for t in out) == \
+            sorted(t.task_id for t in ready), arb.name
+
+
+@settings(max_examples=30, deadline=None)
+@given(data=ready_and_shares())
+def test_fair_share_never_starves_nonzero_shares(data):
+    dags, ready, shares, usage = data
+    strat = make_strategy("rank_min_rr")
+    a = _actx(dags, strat, shares, usage)
+    out = WeightedFairShareArbiter().order(list(ready), a)
+    # full-drain property: every workflow's tasks all appear
+    seen = {t.task_id for t in out}
+    assert seen == {t.task_id for t in ready}
+    # progressive property: each nonzero-share workflow with ready work is
+    # represented in every sufficiently long prefix (one full weighted
+    # round plus catch-up slack for pre-existing usage imbalance)
+    backlog = {}
+    for t in ready:
+        backlog.setdefault(t.spec.workflow_id, 0)
+        backlog[t.spec.workflow_id] += 1
+    max_usage = max(list(usage.values()) + [0.0])
+    slack = int(max_usage / (1.0 / 128.0)) + 4 * len(dags) + 4
+    prefix_ids = {t.spec.workflow_id for t in out[:slack]}
+    for wid, n in backlog.items():
+        if float(shares.get(wid, 1.0)) > 0.0:
+            assert wid in prefix_ids or n == 0, (wid, slack)
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    n=st.integers(1, 8),
+    seed=st.integers(0, 2 ** 31),
+)
+def test_deficits_conserve_shares(n, seed):
+    rng = np.random.default_rng(seed)
+    wids = [f"w{i}" for i in range(n)]
+    shares = {w: float(rng.uniform(0, 5)) for w in wids
+              if rng.random() < 0.8}
+    usage = {w: float(rng.uniform(0, 2)) for w in wids if rng.random() < 0.8}
+    d = deficits(shares, usage, wids)
+    assert abs(sum(d.values())) < 1e-9
+    # a workflow using exactly its target has zero deficit: scale check
+    even = deficits({w: 1.0 for w in wids},
+                    {w: 0.25 for w in wids}, wids)
+    assert all(abs(v) < 1e-12 for v in even.values())

@@ -1,0 +1,280 @@
+"""CWSI conformance suite: every endpoint × method-case × malformed input.
+
+Three families of guarantees, each a regression net for a past or
+plausible wire bug (PR 1 shipped fixes for lowercase methods silently
+404ing and truncated provenance paths crashing the server):
+
+  * **routing**: every verb routes case-insensitively; wrong verbs,
+    truncated / overlong paths, and bad versions produce 4xx *envelopes*
+    (``handle`` never raises),
+  * **validation**: malformed bodies are 400 (client bug), unknown
+    resources are 404, missing capability is 501,
+  * **atomicity**: an error response never mutates scheduler state — no
+    half-registered workflows, partially added tasks, changed strategies,
+    shares, or arbiter policy.
+"""
+import json
+
+import pytest
+
+from repro.cluster import ClusterSimulator, SimConfig
+from repro.cluster.nodes import cpu_node
+from repro.core import (
+    CWSIServer,
+    CommonWorkflowScheduler,
+    DataRef,
+    LotaruPredictor,
+    Resources,
+    TaskSpec,
+)
+
+GiB = 1 << 30
+
+
+def _rig():
+    sim = ClusterSimulator([cpu_node("n0"), cpu_node("n1")], SimConfig(seed=0))
+    cws = CommonWorkflowScheduler(adapter=sim, strategy="rank_min_rr",
+                                  predictor=LotaruPredictor())
+    sim.attach(cws)
+    return sim, cws, CWSIServer(cws)
+
+
+@pytest.fixture()
+def rig():
+    return _rig()
+
+
+def _req(server, method, path, body=None):
+    resp = server.handle(json.dumps(
+        {"method": method, "path": path, "body": body}))
+    out = json.loads(resp)
+    assert set(out) == {"status", "body"}, "malformed response envelope"
+    return out
+
+
+def _task_body(tid, deps=()):
+    spec = TaskSpec(task_id=tid, name="proc",
+                    inputs=(DataRef(f"in-{tid}", GiB),),
+                    resources=Resources(cpus=1.0, mem_bytes=GiB),
+                    params={"sim": {"peak_mem": GiB // 2, "runtime": 3.0}})
+    return {"task": spec.to_json(), "dependsOn": list(deps)}
+
+
+def _snapshot(cws):
+    """Everything an errored call must leave untouched."""
+    return (
+        {wid: sorted((tid, t.state.value) for tid, t in dag.tasks.items())
+         for wid, dag in cws.dags.items()},
+        {w: s.name for w, s in cws.workflow_strategies.items()},
+        dict(cws.workflow_shares),
+        cws.arbiter.name,
+        cws.strategy.name,
+        sorted(cws._ready),
+        sorted(cws.allocations),
+        len(cws.provenance.task_traces),
+    )
+
+
+# ---------------------------------------------------------------------------
+# the full endpoint surface, with a valid exemplar request for each
+# ---------------------------------------------------------------------------
+ENDPOINTS = [
+    ("POST", "/v1/workflow/{wid}", {"name": "x"}, 200),
+    ("POST", "/v1/workflow/{wid}/task", "TASK_BODY", 200),
+    ("GET", "/v1/workflow/{wid}/task/{tid}/state", None, 200),
+    ("GET", "/v1/workflow/{wid}/state", None, 200),
+    ("PUT", "/v1/workflow/{wid}/strategy", {"strategy": "fifo_rr"}, 200),
+    ("PUT", "/v1/workflow/{wid}/share", {"share": 2.5}, 200),
+    ("GET", "/v1/arbiter", None, 200),
+    ("PUT", "/v1/arbiter", {"arbiter": "fair_share"}, 200),
+    ("GET", "/v1/provenance/task/proc", None, 200),
+    ("GET", "/v1/provenance/workflow/{wid}", None, 200),
+    ("GET", "/v1/predict/runtime", {"name": "proc", "inputSize": GiB}, 200),
+    ("GET", "/v1/metrics/nodes", None, 200),
+]
+
+CASES = ["upper", "lower", "title", "mixed"]
+
+
+def _casemethod(method, case):
+    return {"upper": method.upper(), "lower": method.lower(),
+            "title": method.capitalize(),
+            "mixed": "".join(c.lower() if i % 2 else c.upper()
+                             for i, c in enumerate(method))}[case]
+
+
+@pytest.mark.parametrize("case", CASES)
+@pytest.mark.parametrize("method,path,body,expect", ENDPOINTS,
+                         ids=[f"{m} {p}" for m, p, _, _ in ENDPOINTS])
+def test_every_endpoint_routes_case_insensitively(method, path, body, expect,
+                                                  case):
+    sim, cws, server = _rig()
+    wid = f"wf-{case}"
+    # seed state the endpoint needs: a workflow with one finished task
+    _req(server, "POST", f"/v1/workflow/{wid}", {"name": wid})
+    _req(server, "POST", f"/v1/workflow/{wid}/task", _task_body(f"{wid}.t0"))
+    sim.run()
+    server.clock = sim.now
+    path = path.format(wid=wid, tid=f"{wid}.t0")
+    if body == "TASK_BODY":
+        body = _task_body(f"{wid}.t1")
+    out = _req(server, _casemethod(method, case), path, body)
+    assert out["status"] == expect, (method, path, case, out)
+
+
+@pytest.mark.parametrize("method,path,body,expect", ENDPOINTS,
+                         ids=[f"{m} {p}" for m, p, _, _ in ENDPOINTS])
+def test_wrong_verb_is_404_and_mutates_nothing(method, path, body, expect):
+    sim, cws, server = _rig()
+    _req(server, "POST", "/v1/workflow/w0", {"name": "w0"})
+    wrong = {"GET": "DELETE", "POST": "GET", "PUT": "POST"}[method]
+    path = path.format(wid="w0", tid="w0.t0")
+    if body == "TASK_BODY":
+        body = _task_body("w0.t9")
+    before = _snapshot(cws)
+    out = _req(server, wrong, path, body)
+    assert out["status"] == 404, (wrong, path, out)
+    assert _snapshot(cws) == before
+
+
+# ---------------------------------------------------------------------------
+# malformed paths: truncations, overlong routes, bad versions
+# ---------------------------------------------------------------------------
+BAD_PATHS = [
+    ("GET", "", 400),                       # no version at all
+    ("GET", "/", 400),
+    ("GET", "/v1", 404),                    # version only
+    ("GET", "/v2/metrics/nodes", 400),      # unsupported version
+    ("GET", "/metrics/nodes", 400),         # version segment missing
+    ("POST", "/v1/workflow", 404),          # wid missing
+    ("POST", "/v1/workflow/w0/task/extra", 404),
+    ("GET", "/v1/workflow/w0/task/t0", 404),          # '/state' missing
+    ("GET", "/v1/workflow/w0/task/t0/state/x", 404),  # overlong
+    ("GET", "/v1/provenance/task", 404),    # PR 1 regression: truncated
+    ("GET", "/v1/provenance/workflow", 404),
+    ("GET", "/v1/provenance", 404),
+    ("GET", "/v1/predict", 404),
+    ("GET", "/v1/predict/runtime/x", 404),
+    ("GET", "/v1/metrics", 404),
+    ("GET", "/v1/arbiter/extra", 404),
+    ("PUT", "/v1/workflow/w0/share/extra", 404),
+    ("PUT", "/v1/workflow/w0/nosuch", 404),
+]
+
+
+@pytest.mark.parametrize("method,path,expect", BAD_PATHS,
+                         ids=[f"{m} {p or '(empty)'}" for m, p, _ in BAD_PATHS])
+def test_malformed_paths_error_cleanly(rig, method, path, expect):
+    sim, cws, server = rig
+    _req(server, "POST", "/v1/workflow/w0", {"name": "w0"})
+    before = _snapshot(cws)
+    out = _req(server, method, path)
+    assert out["status"] == expect, (method, path, out)
+    assert "error" in out["body"]
+    assert _snapshot(cws) == before
+
+
+# ---------------------------------------------------------------------------
+# malformed bodies: 400s that leave no trace
+# ---------------------------------------------------------------------------
+BAD_BODIES = [
+    ("POST", "/v1/workflow/w0/task", None, 400),              # no body
+    ("POST", "/v1/workflow/w0/task", {}, 400),                # no task
+    ("POST", "/v1/workflow/w0/task", {"task": 5}, 400),       # not an object
+    ("POST", "/v1/workflow/w0/task", {"task": {}}, 400),      # missing fields
+    ("POST", "/v1/workflow/w0/task",
+     {"task": {"id": "w0.t9", "name": "p"},
+      "dependsOn": ["nope"]}, 404),                           # unknown parent
+    ("PUT", "/v1/workflow/w0/strategy", None, 400),
+    ("PUT", "/v1/workflow/w0/strategy", {"strategy": "nope"}, 400),
+    ("PUT", "/v1/workflow/w0/share", None, 400),
+    ("PUT", "/v1/workflow/w0/share", {}, 400),
+    ("PUT", "/v1/workflow/w0/share", {"share": -1}, 400),
+    ("PUT", "/v1/workflow/w0/share", {"share": "many"}, 400),
+    ("PUT", "/v1/workflow/w0/share", {"share": "2.5"}, 400),  # no coercion
+    ("PUT", "/v1/workflow/w0/share", {"share": True}, 400),
+    ("PUT", "/v1/workflow/w0/share", {"share": None}, 400),
+    ("PUT", "/v1/arbiter", None, 400),
+    ("PUT", "/v1/arbiter", {"arbiter": "nope"}, 400),
+    ("PUT", "/v1/arbiter", {"arbiter": 7}, 400),
+    # valid JSON that is not an object must 400, not crash the server
+    ("PUT", "/v1/arbiter", "fair_share", 400),
+    ("PUT", "/v1/workflow/w0/share", "share this", 400),
+    ("PUT", "/v1/workflow/w0/share", 2.5, 400),
+    ("POST", "/v1/workflow/w0/task", [1, 2], 400),
+    ("GET", "/v1/workflow/w0/state", [], 400),
+    ("POST", "/v1/workflow/w0/task",
+     {"task": {"id": "w0.t9", "name": "p"}, "dependsOn": 5}, 400),
+    ("POST", "/v1/workflow/w0/task",
+     {"task": {"id": "w0.t9", "name": "p"}, "dependsOn": [3]}, 400),
+    ("GET", "/v1/predict/runtime", {}, 400),                  # name missing
+    ("GET", "/v1/predict/runtime",
+     {"name": "proc", "inputSize": {"x": 1}}, 400),
+    ("GET", "/v1/workflow/missing/state", None, 404),
+    ("GET", "/v1/workflow/w0/task/missing/state", None, 404),
+    ("GET", "/v1/provenance/workflow/missing", None, 200),    # empty, valid
+]
+
+
+@pytest.mark.parametrize("method,path,body,expect", BAD_BODIES,
+                         ids=[f"{m} {p} {json.dumps(b)[:30]}"
+                              for m, p, b, _ in BAD_BODIES])
+def test_malformed_bodies_never_mutate_state(rig, method, path, body, expect):
+    sim, cws, server = rig
+    _req(server, "POST", "/v1/workflow/w0", {"name": "w0"})
+    before = _snapshot(cws)
+    out = _req(server, method, path, body)
+    assert out["status"] == expect, (method, path, body, out)
+    if out["status"] != 200:
+        assert "error" in out["body"]
+    assert _snapshot(cws) == before
+
+
+def test_predict_without_predictor_is_501(rig):
+    sim, cws, server = rig
+    cws.predictor = None
+    out = _req(server, "GET", "/v1/predict/runtime", {"name": "p"})
+    assert out["status"] == 501
+
+
+def test_unparseable_task_dependency_adds_no_partial_task(rig):
+    """The PR 1 atomicity fix, over the wire: a submit rejected for an
+    unknown dependency must leave the DAG exactly as it was."""
+    sim, cws, server = rig
+    _req(server, "POST", "/v1/workflow/w0", {"name": "w0"})
+    out = _req(server, "POST", "/v1/workflow/w0/task",
+               _task_body("w0.t0", deps=("ghost",)))
+    assert out["status"] == 404
+    assert "w0.t0" not in cws.dags["w0"]
+    # the same id then submits cleanly (no tombstone left behind)
+    out = _req(server, "POST", "/v1/workflow/w0/task", _task_body("w0.t0"))
+    assert out["status"] == 200
+
+
+def test_rejected_submit_does_not_register_the_workflow(rig):
+    """Submitting a bad task to a *never-registered* workflow id must not
+    leave a half-registered workflow behind."""
+    sim, cws, server = rig
+    out = _req(server, "POST", "/v1/workflow/ghost-wf/task",
+               _task_body("g.t0", deps=("ghost",)))
+    assert out["status"] == 404
+    assert "ghost-wf" not in cws.dags
+    # whereas a valid submit auto-registers, as before
+    out = _req(server, "POST", "/v1/workflow/ghost-wf/task",
+               _task_body("g.t0"))
+    assert out["status"] == 200
+    assert "ghost-wf" in cws.dags
+
+
+def test_share_and_arbiter_roundtrip(rig):
+    sim, cws, server = rig
+    out = _req(server, "PUT", "/v1/workflow/wX/share", {"share": 3})
+    assert out["status"] == 200 and out["body"]["share"] == 3.0
+    out = _req(server, "PUT", "/v1/arbiter", {"arbiter": "strict_priority"})
+    assert out["status"] == 200
+    status = _req(server, "GET", "/v1/arbiter")["body"]
+    assert status["arbiter"] == "strict_priority"
+    assert status["shares"] == {"wX": 3.0}
+    assert abs(sum(status["deficits"].values())) < 1e-9
+    assert {"arbiterRounds", "placementProbes",
+            "feasibilityChecks"} <= set(status)

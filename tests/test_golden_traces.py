@@ -1,0 +1,119 @@
+"""Golden-trace regression tests: scheduling decisions, pinned to disk.
+
+Every built-in strategy (and every arbiter, in a two-tenant scenario) runs
+a small nf-core-shaped DAG through the simulator; the resulting
+(task, node, start-time) trace must match the snapshot under
+``tests/golden/``. A future refactor either proves itself
+decision-identical, or *consciously* regenerates:
+
+    REGEN_GOLDEN=1 PYTHONPATH=src python -m pytest tests/test_golden_traces.py
+
+and reviews the diff like any other behavioural change. Start times round
+to microseconds so snapshots are stable across float-repr differences
+while still pinning the actual schedule.
+"""
+import json
+import os
+from pathlib import Path
+
+import pytest
+
+from repro.cluster import (
+    ClusterSimulator,
+    SimConfig,
+    build_workflow,
+    heterogeneous_cluster,
+)
+from repro.core import CommonWorkflowScheduler, LotaruPredictor
+from repro.core.strategies import STRATEGIES
+
+GOLDEN_DIR = Path(__file__).parent / "golden"
+REGEN = bool(os.environ.get("REGEN_GOLDEN"))
+
+
+def _trace(cws, dags):
+    out = []
+    wids = {d.workflow_id for d in dags}
+    for tr in cws.provenance.task_traces:
+        if tr.workflow_id in wids and tr.state == "SUCCEEDED":
+            out.append([tr.task_id, tr.node, round(tr.start_time, 6)])
+    out.sort(key=lambda e: (e[2], e[0]))
+    return out
+
+
+def _run_scenario(strategy, arbiter, shares, workflows, submit_times, seed,
+                  n_nodes=4):
+    sim = ClusterSimulator(heterogeneous_cluster(n_nodes),
+                           SimConfig(seed=seed))
+    cws = CommonWorkflowScheduler(adapter=sim, strategy=strategy,
+                                  predictor=LotaruPredictor(),
+                                  arbiter=arbiter)
+    for wid, share in shares.items():
+        cws.set_workflow_share(wid, share)
+    sim.attach(cws)
+    dags = []
+    for (wf, wf_seed, wid, n), t in zip(workflows, submit_times):
+        dag = build_workflow(wf, seed=wf_seed, workflow_id=wid, n_samples=n)
+        dags.append(dag)
+        sim.submit_workflow_at(t, dag)
+    sim.run()
+    assert all(d.succeeded() for d in dags)
+    return _trace(cws, dags)
+
+
+def _check(name, trace):
+    path = GOLDEN_DIR / f"{name}.json"
+    if REGEN:
+        GOLDEN_DIR.mkdir(exist_ok=True)
+        path.write_text(json.dumps({"scenario": name, "trace": trace},
+                                   indent=1) + "\n")
+        return
+    if not path.exists():
+        pytest.fail(
+            f"missing golden snapshot {path.name}; generate with "
+            f"REGEN_GOLDEN=1 pytest tests/test_golden_traces.py")
+    golden = json.loads(path.read_text())["trace"]
+    assert trace == golden, (
+        f"scheduling decisions diverged from tests/golden/{path.name} "
+        f"({sum(1 for a, b in zip(trace, golden) if a != b)} differing "
+        f"entries of {len(golden)}); if intentional, regenerate with "
+        f"REGEN_GOLDEN=1 and review the diff")
+
+
+@pytest.mark.parametrize("strategy", sorted(STRATEGIES))
+def test_strategy_traces_are_golden(strategy):
+    trace = _run_scenario(
+        strategy, "first_appearance", {},
+        workflows=[("chipseq", 3, "wf-golden", 2)],
+        submit_times=[0.0], seed=42)
+    assert trace, "empty trace"
+    _check(f"strategy_{strategy}", trace)
+
+
+# two tenants racing on a 2-node cluster: contention every round, so the
+# interleaving policy shows up in the trace
+_TENANT_SCENARIO = dict(
+    shares={"tenant-a": 1.0, "tenant-b": 3.0},
+    workflows=[("chipseq", 5, "tenant-a", 3),
+               ("viralrecon", 6, "tenant-b", 3)],
+    submit_times=[0.0, 0.0], seed=42, n_nodes=2)
+
+
+@pytest.mark.parametrize("arbiter", ["first_appearance", "fair_share",
+                                     "strict_priority"])
+def test_arbiter_traces_are_golden(arbiter):
+    trace = _run_scenario("rank_min_rr", arbiter, **_TENANT_SCENARIO)
+    assert trace, "empty trace"
+    _check(f"arbiter_{arbiter}", trace)
+
+
+def test_arbiters_actually_differ():
+    """Sanity for the suite itself: fair-share and strict-priority golden
+    scenarios must not collapse into the first-appearance schedule (if
+    they did, the arbiter snapshots would pin nothing new)."""
+    traces = {
+        arbiter: _run_scenario("rank_min_rr", arbiter, **_TENANT_SCENARIO)
+        for arbiter in ("first_appearance", "fair_share", "strict_priority")
+    }
+    assert traces["fair_share"] != traces["first_appearance"]
+    assert traces["strict_priority"] != traces["first_appearance"]

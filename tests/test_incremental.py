@@ -254,6 +254,124 @@ def test_replacing_workflow_with_active_tasks_is_rejected():
     assert replacement2.succeeded()
 
 
+def test_spec_win_while_original_requeued_does_not_relaunch():
+    """A speculative copy can win while its node-lost original sits READY
+    and unplaceable; crediting the success must pull the original off the
+    ready queue, or it would run a second time after succeeding."""
+    adapter = _RecordingAdapter()
+    pred = LotaruPredictor()
+    for sz in (GiB, GiB, 2 * GiB, 2 * GiB):
+        pred.observe("slowproc", sz, 10.0)
+    cws = CommonWorkflowScheduler(
+        adapter=adapter, strategy="rank_min_rr", predictor=pred,
+        enable_speculation=True, speculation_factor=1.0,
+        speculation_min_runtime=1.0)
+    cws.add_node(NodeInfo("n0", cpus=4, mem_bytes=8 * GiB), now=0.0)
+    cws.add_node(NodeInfo("n1", cpus=4, mem_bytes=8 * GiB), now=0.0)
+    dag = WorkflowDAG("w", "w")
+    dag.add_task(TaskSpec(task_id="w.t0", name="slowproc",
+                          inputs=(DataRef("in", GiB),),
+                          resources=Resources(cpus=2.0, mem_bytes=GiB)))
+    cws.submit_workflow(dag, now=0.0)
+    cws.on_task_started("w.t0", now=0.0)
+    assert cws.check_speculation(now=100.0) == 1
+    orig_node = cws.allocations["w.t0"].node
+    copy_id = cws.spec_of_original["w.t0"]
+    copy_node = cws.allocations[copy_id].node
+    # fill the copy's node completely, then lose the original's node: the
+    # requeued original has nowhere to go
+    filler = WorkflowDAG("f", "f")
+    filler.add_task(TaskSpec(task_id="f.t0", name="big",
+                             resources=Resources(cpus=2.0, mem_bytes=GiB)))
+    cws.submit_workflow(filler, now=105.0)
+    assert cws.allocations["f.t0"].node == copy_node
+    cws.remove_node(orig_node, now=110.0)
+    # original is requeued but nothing can host it
+    assert dag.task("w.t0").state == TaskState.READY
+    assert "w.t0" in cws._ready
+    # a late TASK_START from the dead launch must not flip the requeued
+    # task to RUNNING (only SCHEDULED tasks may start)
+    cws.on_task_started("w.t0", now=112.0)
+    assert dag.task("w.t0").state == TaskState.READY
+    launches_before = len(adapter.launched)
+    # the copy wins; then capacity frees up — the succeeded original must
+    # NOT be relaunched by the next rounds
+    cws.on_task_finished(copy_id, now=120.0, result=TaskResult(True))
+    assert dag.task("w.t0").state == TaskState.SUCCEEDED
+    assert "w.t0" not in cws._ready
+    cws.on_task_finished("f.t0", now=130.0, result=TaskResult(True))
+    cws.schedule(now=131.0)
+    assert len(adapter.launched) == launches_before
+    assert dag.succeeded() and filler.succeeded()
+    assert cws.allocations == {} and cws.mem_allocated == {}
+
+
+def test_duplicate_finish_report_is_ignored():
+    """The adapter protocol is the public surface: a duplicate/late
+    TASK_FINISH for a settled task must not double-decrement children's
+    unmet-dependency counts (the legacy scan re-derived readiness from
+    parent states, so this was silently harmless before the counters)."""
+    adapter = _RecordingAdapter()
+    cws = CommonWorkflowScheduler(adapter=adapter, strategy="rank_min_rr")
+    cws.add_node(NodeInfo("n0", cpus=2, mem_bytes=8 * GiB), now=0.0)
+    dag = WorkflowDAG("w", "w")
+    for tid in ("w.a", "w.b"):
+        dag.add_task(TaskSpec(task_id=tid, name="p",
+                              resources=Resources(cpus=1.0, mem_bytes=GiB)))
+    dag.add_task(TaskSpec(task_id="w.c", name="p",
+                          resources=Resources(cpus=1.0, mem_bytes=GiB)),
+                 deps=("w.a", "w.b"))
+    cws.submit_workflow(dag, now=0.0)
+    cws.on_task_finished("w.a", now=1.0, result=TaskResult(True))
+    # duplicate success for a, and a late failure for the settled task:
+    # both must be ignored outright
+    cws.on_task_finished("w.a", now=2.0, result=TaskResult(True))
+    cws.on_task_finished("w.a", now=2.5, result=TaskResult(False,
+                                                           reason="late"))
+    # ... and a late TASK_START must not resurrect the settled task
+    cws.on_task_started("w.a", now=2.6)
+    assert dag.task("w.c").state == TaskState.PENDING   # b still running
+    assert dag.task("w.a").state == TaskState.SUCCEEDED
+    assert dag.task("w.a").attempt == 0
+    cws.on_task_finished("w.b", now=3.0, result=TaskResult(True))
+    assert dag.task("w.c").state in (TaskState.READY, TaskState.SCHEDULED)
+    cws.on_task_finished("w.c", now=4.0, result=TaskResult(True))
+    assert dag.succeeded()
+
+
+def test_heft_memo_survives_workflow_replacement():
+    """Replacing an idle workflow must not serve the old DAG's memoised
+    HEFT ranks to the new DAG (workflow ids recur, versions restart)."""
+    from repro.core.strategies import HEFTStrategy
+
+    adapter = _RecordingAdapter()
+    pred = LotaruPredictor()
+    strat = HEFTStrategy()
+    cws = CommonWorkflowScheduler(adapter=adapter, strategy=strat,
+                                  predictor=pred)
+    cws.add_node(NodeInfo("n0", cpus=16, mem_bytes=32 * GiB), now=0.0)
+    old = WorkflowDAG("w", "w")
+    for i in range(3):                      # version: 3 add_task bumps
+        old.add_task(TaskSpec(task_id=f"w.old{i}", name="p",
+                              resources=Resources(cpus=1.0, mem_bytes=GiB)))
+    cws.submit_workflow(old, now=0.0)       # HEFT memoises old's ranks
+    for i in range(3):
+        # finish at now=0.0: zero runtime skips predictor.observe, so the
+        # predictor version cannot mask a version collision between DAGs
+        cws.on_task_finished(f"w.old{i}", now=0.0, result=TaskResult(True))
+    # rebuilt DAG, same id, same version count, different task ids
+    new = WorkflowDAG("w", "w")
+    new.add_task(TaskSpec(task_id="w.new0", name="p",
+                          resources=Resources(cpus=1.0, mem_bytes=GiB)))
+    new.add_task(TaskSpec(task_id="w.new1", name="p",
+                          resources=Resources(cpus=1.0, mem_bytes=GiB)))
+    new.add_dep("w.new0", "w.new1")
+    cws.submit_workflow(new, now=2.0)       # must not KeyError on w.new*
+    cws.on_task_finished("w.new0", now=3.0, result=TaskResult(True))
+    cws.on_task_finished("w.new1", now=4.0, result=TaskResult(True))
+    assert new.succeeded()
+
+
 def test_failed_submit_leaves_no_partial_task():
     dag = WorkflowDAG("w", "w")
     with pytest.raises(KeyError):
