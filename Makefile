@@ -1,7 +1,9 @@
 # Tier-1 verification and benchmarks for the CWS/CWSI reproduction.
 #
 #   make test         the tier-1 suite (ROADMAP.md "Tier-1 verify")
-#   make bench        scheduling-overhead scale benchmark (old vs new engine)
+#   make bench        scheduling-overhead scale benchmark (old vs new engine);
+#                     writes BENCH_sched_scale.json (CI uploads it as an
+#                     artifact; override the path with BENCH_JSON=...)
 #   make bench-smoke  the same bench at CI scale (~30 s)
 #   make bench-all    every paper-artifact benchmark (benchmarks/run.py)
 #   make golden       regenerate tests/golden/ scheduling-trace snapshots

@@ -45,15 +45,19 @@ class LocalExecutor:
     # ---- ClusterAdapter ----
     def launch(self, task: Task, node: str, mem_alloc: int) -> None:
         self._cancelled[task.task_id] = False
-        self._pool.submit(self._run, task, node)
+        # capture the launch id now: the Task object is shared, so a
+        # relaunch would otherwise make a stale worker report under the
+        # live launch's id
+        self._pool.submit(self._run, task, node, task.launch_id)
 
     def kill(self, task_id: str) -> None:
         self._cancelled[task_id] = True       # cooperative: result discarded
 
-    def _run(self, task: Task, node: str) -> None:
+    def _run(self, task: Task, node: str, launch_id: int) -> None:
         assert self.cws is not None
         with self._lock:
-            self.cws.on_task_started(task.task_id, self.now())
+            self.cws.on_task_started(task.task_id, self.now(),
+                                     launch_id=launch_id)
         t0 = time.monotonic()
         try:
             fn = task.spec.fn
@@ -75,7 +79,12 @@ class LocalExecutor:
                 task.task_id, self.now(),
                 TaskResult(ok, peak_mem_bytes=peak, cpu_seconds=cpu_s,
                            reason=reason, output=out),
+                launch_id=launch_id,
             )
+            # wall-clock completions have no same-instant batch to
+            # coalesce with: run the deferred round now rather than
+            # waiting up to poll_s for the driver loop to wake
+            self.cws.schedule_pending(self.now())
 
     # ---- driver ----
     def run_to_completion(self, dag: WorkflowDAG, poll_s: float = 0.01,

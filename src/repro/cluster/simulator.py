@@ -88,6 +88,9 @@ class ClusterSimulator:
         self._node_of_launch[gen] = node
         self._task_of_launch[gen] = task
         self._gens_on_node.setdefault(node, set()).add(gen)
+        # engine-issued launch id, reported back with start/finish so the
+        # engine itself can reject reports from superseded launches
+        lid = task.launch_id
         self.launches += 1
 
         sim = task.spec.params.get("sim", {})
@@ -114,18 +117,18 @@ class ClusterSimulator:
             # OOM-kill partway through (the task dies when it touches the
             # allocation boundary — model at the matching fraction of runtime)
             frac = max(0.05, min(1.0, mem_alloc / true_peak))
-            self._push(start, "TASK_START", {"gen": gen})
+            self._push(start, "TASK_START", {"gen": gen, "lid": lid})
             self._push(start + runtime * frac, "TASK_FINISH", {
-                "gen": gen,
+                "gen": gen, "lid": lid,
                 "result": TaskResult(False, peak_mem_bytes=mem_alloc, oom=True,
                                      reason="OOMKilled"),
             })
             return
 
         cpu_eff = float(sim.get("cpu_utilisation", 0.8))
-        self._push(start, "TASK_START", {"gen": gen})
+        self._push(start, "TASK_START", {"gen": gen, "lid": lid})
         self._push(start + runtime, "TASK_FINISH", {
-            "gen": gen,
+            "gen": gen, "lid": lid,
             "result": TaskResult(
                 True,
                 peak_mem_bytes=true_peak or mem_alloc // 2,
@@ -178,9 +181,19 @@ class ClusterSimulator:
         return task
 
     def run(self, until: float = math.inf, max_events: int = 10_000_000) -> float:
-        """Drain the event loop; returns the final virtual time."""
+        """Drain the event loop; returns the final virtual time.
+
+        Scheduling rounds are coalesced: event handlers only mark the
+        engine pending (``request_schedule``), and one round runs per
+        *virtual timestamp* once every same-time event has been applied —
+        a W-wide same-timestamp completion burst costs one round, not W.
+        With ``sync_schedule=True`` engines the handlers schedule inline
+        and ``schedule_pending`` is a no-op, restoring the old cadence.
+        """
         assert self.cws is not None, "attach() a scheduler first"
         cws = self.cws
+        # work deferred before run() (e.g. CWSI batch submits) starts now
+        cws.schedule_pending(self.now)
         n = 0
         while self._heap and self._heap[0].time <= until:
             n += 1
@@ -192,14 +205,17 @@ class ClusterSimulator:
             if ev.kind == "TASK_START":
                 task = self._live(ev.payload["gen"])
                 if task is not None:
-                    cws.on_task_started(task.task_id, self.now)
+                    cws.on_task_started(task.task_id, self.now,
+                                        launch_id=ev.payload.get("lid"))
 
             elif ev.kind == "TASK_FINISH":
                 gen = ev.payload["gen"]
                 task = self._live(gen)
                 if task is not None:
                     self._launch_gen.pop(task.task_id, None)
-                    cws.on_task_finished(task.task_id, self.now, ev.payload["result"])
+                    cws.on_task_finished(task.task_id, self.now,
+                                         ev.payload["result"],
+                                         launch_id=ev.payload.get("lid"))
                 self._retire(gen)
 
             elif ev.kind == "NODE_FAIL":
@@ -225,10 +241,19 @@ class ClusterSimulator:
 
             elif ev.kind == "SPEC_CHECK":
                 cws.check_speculation(self.now)
-                cws.schedule(self.now)
+                cws.request_schedule(self.now)
                 if any(not d.finished() for d in cws.dags.values()):
                     self._push(self.now + self.config.speculation_period,
                                "SPEC_CHECK", {})
+
+            # same-timestamp batch drained (launches may re-arm the current
+            # timestamp; the loop then drains and flushes it again) → run
+            # the single coalesced round for this instant
+            if not self._heap or self._heap[0].time > self.now:
+                cws.schedule_pending(self.now)
+        # a round requested by the final batch (or by an `until` cutoff)
+        # still runs at the last processed instant
+        cws.schedule_pending(self.now)
         return self.now
 
 

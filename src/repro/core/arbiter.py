@@ -31,9 +31,19 @@ conservation — asserted by the property suite and ``make bench``).
 """
 from __future__ import annotations
 
+import heapq
 from abc import ABC, abstractmethod
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Mapping, Optional, Tuple, TYPE_CHECKING
+from typing import (
+    Any,
+    Callable,
+    Dict,
+    List,
+    Mapping,
+    Optional,
+    Tuple,
+    TYPE_CHECKING,
+)
 
 from .dag import Task
 
@@ -95,6 +105,13 @@ class ArbiterContext:
     usage_fn: Callable[[Mapping[str, float]], Dict[str, float]] = (
         lambda totals: {})
     totals_fn: Callable[[], Dict[str, float]] = dict
+    # engine-provided cached priority queues: (wid, tasks) -> sorted
+    # [(key, task), ...] or None when the workflow's effective strategy
+    # declares no cacheable key. ``None`` (the default, e.g. in unit
+    # rigs) makes every arbiter fall back to fresh prioritize() calls.
+    keyed_queue_fn: Optional[
+        Callable[[str, List[Task]], Optional[List[Tuple[Any, Task]]]]
+    ] = None
     _appearance: Optional[Dict[str, int]] = field(default=None, repr=False)
     _usage: Optional[Dict[str, float]] = field(default=None, repr=False)
     _totals: Optional[Dict[str, float]] = field(default=None, repr=False)
@@ -120,6 +137,13 @@ class ArbiterContext:
     def share_of(self, wid: str) -> float:
         return float(self.shares.get(wid, 1.0))
 
+    def keyed_queue(
+        self, wid: str, tasks: List[Task]
+    ) -> Optional[List[Tuple[Any, Task]]]:
+        if self.keyed_queue_fn is None:
+            return None
+        return self.keyed_queue_fn(wid, tasks)
+
 
 class Arbiter(ABC):
     """Interleaves per-workflow priority lists into one global order."""
@@ -141,14 +165,24 @@ class Arbiter(ABC):
         per-task sort key to one workflow's tasks yields the subsequence of
         the global order, so intra-workflow priorities are unchanged by
         arbitration — only the interleaving between workflows is.
+
+        When the engine supplies cached keyed queues, each workflow's
+        list is served from its cache (re-sorted only when membership or
+        the strategy's token changed) instead of a fresh per-round sort.
         """
         queues: Dict[str, List[Task]] = {}
         for task in ready:
             queues.setdefault(task.spec.workflow_id, []).append(task)
-        return [
-            (wid, actx.strategy_for(tasks[0]).prioritize(tasks, actx.ctx))
-            for wid, tasks in queues.items()
-        ]
+        out: List[Tuple[str, List[Task]]] = []
+        for wid, tasks in queues.items():
+            keyed = actx.keyed_queue(wid, tasks)
+            if keyed is not None:
+                out.append((wid, [t for _, t in keyed]))
+            else:
+                out.append(
+                    (wid, actx.strategy_for(tasks[0]).prioritize(tasks,
+                                                                 actx.ctx)))
+        return out
 
 
 class FirstAppearanceArbiter(Arbiter):
@@ -166,6 +200,9 @@ class FirstAppearanceArbiter(Arbiter):
 
     def order(self, ready: List[Task], actx: ArbiterContext) -> List[Task]:
         if actx.single_strategy is not None:
+            merged = self._merged_order(ready, actx)
+            if merged is not None:
+                return merged
             return actx.single_strategy.prioritize(ready, actx.ctx)
         ordered: List[Task] = []
         groups: List[Tuple["Strategy", List[Task]]] = []
@@ -179,8 +216,38 @@ class FirstAppearanceArbiter(Arbiter):
             else:
                 groups[i][1].append(task)
         for strat, group in groups:
-            ordered.extend(strat.prioritize(group, actx.ctx))
+            merged = self._merged_order(group, actx)
+            ordered.extend(merged if merged is not None
+                           else strat.prioritize(group, actx.ctx))
         return ordered
+
+    @staticmethod
+    def _merged_order(tasks: List[Task],
+                      actx: ArbiterContext) -> Optional[List[Task]]:
+        """Cross-workflow order via a k-way merge of cached keyed queues.
+
+        A global ``sorted(tasks, key)`` equals the merge of per-workflow
+        lists sorted by the same total key (the engine suffixes each key
+        with a promotion sequence number, making ties impossible — which
+        also reproduces the stable sort's promotion-order tie-breaking).
+        Returns None when any queue is uncacheable, falling back to the
+        plain prioritize() path.
+        """
+        if actx.keyed_queue_fn is None:
+            return None
+        buckets: Dict[str, List[Task]] = {}
+        for task in tasks:
+            buckets.setdefault(task.spec.workflow_id, []).append(task)
+        keyed_lists = []
+        for wid, bucket in buckets.items():
+            keyed = actx.keyed_queue(wid, bucket)
+            if keyed is None:
+                return None
+            keyed_lists.append(keyed)
+        if len(keyed_lists) == 1:
+            return [t for _, t in keyed_lists[0]]
+        return [t for _, t in heapq.merge(*keyed_lists,
+                                          key=lambda kv: kv[0])]
 
 
 class WeightedFairShareArbiter(Arbiter):
@@ -210,9 +277,6 @@ class WeightedFairShareArbiter(Arbiter):
         for wid, _ in queues:
             virt[wid] = actx.usage.get(wid, 0.0)
             share[wid] = max(actx.share_of(wid), 0.0)
-        heads = {wid: 0 for wid, _ in queues}
-        live = [(wid, q) for wid, q in queues if q]
-        out: List[Task] = []
 
         def key(wid: str) -> Tuple[float, float]:
             # zero-share workflows are a strictly lower tier: serviced only
@@ -222,13 +286,22 @@ class WeightedFairShareArbiter(Arbiter):
                 return (1.0, virt[wid])
             return (0.0, virt[wid] / share[wid])
 
-        while live:
-            best = min(
-                live,
-                key=lambda wq: (key(wq[0]),
-                                actx.appearance.get(wq[0], 1 << 30), wq[0]),
-            )
-            wid, q = best
+        # deficit heap: each live workflow has exactly one entry keyed by
+        # (tier, usage/share ratio, appearance, wid). Only the emitting
+        # workflow's ratio changes per emission (its virtual charge), so
+        # it alone is re-pushed — an emission costs O(log W) instead of
+        # the former O(W) min() scan over every live queue.
+        heap: List[Tuple[float, float, int, str, List[Task]]] = []
+        for wid, q in queues:
+            if q:
+                tier, ratio = key(wid)
+                heap.append((tier, ratio,
+                             actx.appearance.get(wid, 1 << 30), wid, q))
+        heapq.heapify(heap)
+        heads = {wid: 0 for wid, _ in queues}
+        out: List[Task] = []
+        while heap:
+            _, _, app, wid, q = heapq.heappop(heap)
             task = q[heads[wid]]
             heads[wid] += 1
             out.append(task)
@@ -238,8 +311,9 @@ class WeightedFairShareArbiter(Arbiter):
                 dominant_cost(res.cpus, res.mem_bytes, res.chips, totals),
                 1e-9,
             )
-            if heads[wid] >= len(q):
-                live = [(w, qq) for w, qq in live if w != wid]
+            if heads[wid] < len(q):
+                tier, ratio = key(wid)
+                heapq.heappush(heap, (tier, ratio, app, wid, q))
         return out
 
 

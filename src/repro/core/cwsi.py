@@ -20,10 +20,20 @@ touching either side. The verb surface follows Lehmann et al. (CCGrid'23):
   PUT  /{version}/workflow/{wid}/share                 set fair-share weight
   GET  /{version}/arbiter                              arbitration status
   PUT  /{version}/arbiter                              choose arbiter policy
+  GET  /{version}/stats                                op-counter snapshot
   GET  /{version}/provenance/task/{name}               task traces
   GET  /{version}/provenance/workflow/{wid}            workflow traces
   GET  /{version}/predict/runtime                      predicted runtime
   GET  /{version}/metrics/nodes                        node utilisation
+
+Batched scheduling
+------------------
+Task submissions coalesce: ``POST .../task`` asks the engine for a round
+(``request_schedule``) instead of running one inline, and the pending
+round executes once when the resource manager advances ``CWSIServer.clock``
+past the batch's timestamp (or when its event loop drains, e.g.
+``ClusterSimulator.run``). An engine built with ``sync_schedule=True``
+keeps the historical round-per-submit cadence.
 
 Arbitration
 -----------
@@ -87,7 +97,20 @@ class CWSIServer:
 
     def __init__(self, scheduler: CommonWorkflowScheduler) -> None:
         self.scheduler = scheduler
-        self.clock: float = 0.0   # advanced by the resource manager
+        self._clock: float = 0.0
+
+    @property
+    def clock(self) -> float:
+        """Virtual time, advanced by the resource manager."""
+        return self._clock
+
+    @clock.setter
+    def clock(self, value: float) -> None:
+        if value != self._clock:
+            # the clock moving closes the current submit batch: the round
+            # it deferred runs at the batch's own timestamp
+            self.scheduler.schedule_pending(self._clock)
+        self._clock = value
 
     # transport entrypoint -------------------------------------------------
     def handle(self, raw_request: str) -> str:
@@ -139,7 +162,10 @@ class CWSIServer:
                 raise CWSIError(400, "'dependsOn' must be a list of task ids")
             deps = tuple(raw_deps)
             task = self.scheduler.submit_task(spec, deps, now=self.clock)
-            self.scheduler.schedule(self.clock)
+            # batch-friendly: mark the engine pending instead of running a
+            # round per submitted task (sync_schedule engines still run
+            # the round inline here)
+            self.scheduler.request_schedule(self.clock)
             return 200, {"taskId": task.task_id, "state": task.state.value}
 
         if (method == "GET" and len(parts) == 5
@@ -184,6 +210,17 @@ class CWSIServer:
                 raise CWSIError(400, "body must carry an 'arbiter' name")
             arb = self.scheduler.set_arbiter(name)
             return 200, {"arbiter": arb.name}
+
+        if method == "GET" and parts == ["stats"]:
+            # scheduling-overhead counters (CI asserts against these to
+            # catch event-path cost regressions); read-only by contract
+            stats = self.scheduler.stats()
+            return 200, {
+                "opCounts": self.scheduler.op_counts(),
+                "schedulePending": stats["schedule_pending"],
+                "running": stats["running"],
+                "ready": stats["ready"],
+            }
 
         if (method == "GET" and len(parts) == 3
                 and parts[:2] == ["provenance", "task"]):

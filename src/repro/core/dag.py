@@ -149,6 +149,14 @@ class Task:
     end_time: float = 0.0
     speculative_of: Optional[str] = None  # original task id if this is a backup copy
     failure_reason: str = ""
+    # id of the task's *live* launch, assigned by the engine on every
+    # launch; completion reports carrying a stale id are rejected (a dead
+    # launch's late success must not settle a relaunched task)
+    launch_id: int = 0
+    # position in the engine's ready-queue admission order (re-stamped on
+    # requeue); suffixes cached priority keys so key ties resolve exactly
+    # as the stable per-round sort did
+    ready_seq: int = 0
 
     @property
     def task_id(self) -> str:
@@ -193,6 +201,10 @@ class WorkflowDAG:
         # structure/data version, bumped on every mutation — memo key for
         # strategies caching derived quantities (e.g. HEFT weighted ranks)
         self.version: int = 0
+        # tasks not yet in a terminal state (SUCCEEDED/ERROR), maintained by
+        # add_task / on_task_succeeded / on_task_error so finished() is O(1)
+        # on the completion hot path instead of an O(V) scan per event
+        self._n_unterminated: int = 0
         # op counters (read by benchmarks/bench_sched_scale.py)
         self.readiness_ops: int = 0   # task/parent entries examined for readiness
         self.rank_ops: int = 0        # nodes visited computing/patching ranks
@@ -214,6 +226,7 @@ class WorkflowDAG:
         self.tasks[spec.task_id] = task
         self._unmet[spec.task_id] = 0
         self._runnable[spec.task_id] = None
+        self._n_unterminated += 1
         if self._rank_cache is not None:
             # a fresh task has no children: unit rank 1
             self._rank_cache[spec.task_id] = 1.0
@@ -358,8 +371,10 @@ class WorkflowDAG:
 
         Returns how many children became runnable. Must be called exactly
         once per task success (success is terminal, so parents succeed at
-        most once per workflow run).
+        most once per workflow run). Also retires the task from the
+        unterminated counter behind ``finished()``.
         """
+        self._n_unterminated -= 1
         newly = 0
         for child in self.children[task_id]:
             self.readiness_ops += 1
@@ -369,6 +384,15 @@ class WorkflowDAG:
                 self._runnable[child] = None
                 newly += 1
         return newly
+
+    def on_task_error(self, task_id: str) -> None:
+        """Retire a permanently failed task (retries exhausted → ERROR).
+
+        The ERROR counterpart of ``on_task_succeeded``'s terminal
+        bookkeeping; must be called exactly once per task that enters
+        ERROR (ERROR is terminal, so at most once per task).
+        """
+        self._n_unterminated -= 1
 
     def touch(self) -> None:
         """Bump the data version (inputs/outputs mutated in place)."""
@@ -382,7 +406,9 @@ class WorkflowDAG:
         return counts
 
     def finished(self) -> bool:
-        return all(t.state.terminal for t in self.tasks.values())
+        # counter-based (O(1)): ``finished()`` sits on the completion hot
+        # path — it used to be an O(V) scan run once per task completion
+        return self._n_unterminated <= 0
 
     def succeeded(self) -> bool:
         return all(t.state == TaskState.SUCCEEDED for t in self.tasks.values())

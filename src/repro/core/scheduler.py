@@ -12,12 +12,31 @@ exclusively through the CWSI (``cwsi.py``). The engine owns:
   * straggler mitigation by speculative execution (first finisher wins),
   * elastic node join/leave (running work on a lost node is requeued).
 
+The event→decision path is amortized constant time: events mark the
+scheduler pending (``request_schedule``) and the driver coalesces every
+same-timestamp event into one round (``schedule_pending``); arbiter
+accounting (cluster totals, per-workflow dominant-resource usage) is
+maintained as launch/release deltas; node views are patched per launch
+instead of re-snapshotted; and ``dag.finished()`` is a counter, not a
+scan. ``sync_schedule=True`` restores the round-per-event cadence and
+``legacy_scan=True`` the per-round rescan cost model, for baselines.
+The incremental *cost model* never changes decisions (usage floats,
+cached orders, and patched views are bit-identical — pinned by
+tests/golden and the bench). Coalescing itself is decision-identical
+whenever same-instant events do not compete for scarce slots — whole-DAG
+submission stays a synchronous barrier, and the golden/bench workloads
+are pinned bit-identical — but a coalesced round *sees the union ready
+set of its instant*: when same-instant completions race for the last
+slots, it orders them with full information where the sync cadence
+served them event-by-event.
+
 In the TPU adaptation a "node" is a *slice* (e.g. one pod = 256 chips), so a
 gang-scheduled step-program always fits a single NodeView; cross-slice gangs
 are expressed as multiple cooperating tasks.
 """
 from __future__ import annotations
 
+import itertools
 import logging
 from dataclasses import dataclass, field, replace
 from typing import Any, Callable, Dict, List, Optional, Protocol, Tuple
@@ -124,6 +143,7 @@ class CommonWorkflowScheduler:
         staging_bandwidth: float = 1e9,
         use_predicted_memory: bool = False,
         legacy_scan: bool = False,
+        sync_schedule: bool = False,
         arbiter: str | Arbiter = "first_appearance",
     ) -> None:
         self.adapter = adapter
@@ -157,11 +177,38 @@ class CommonWorkflowScheduler:
         self._ready: Dict[str, Task] = {}
         self._dirty_dags: Dict[str, None] = {}
         self._queue_dirty = True
+        # per-workflow ready-membership versions, backing the priority-
+        # order cache (a workflow's sorted ready queue is reused across
+        # rounds until its membership or its strategy's token moves)
+        self._bucket_version: Dict[str, int] = {}
+        self._ready_seq = itertools.count(1)
+        # wid -> (cache token, [(priority key, task), ...] sorted)
+        self._order_cache: Dict[str, Tuple[Any, List[Tuple[Any, Task]]]] = {}
+        self.priority_sorts = 0        # full per-workflow queue sorts
+        self.priority_cache_hits = 0   # rounds served from the order cache
         # legacy_scan=True restores the pre-incremental full-scan rounds
         # and the index-free placement walk (benchmark baseline +
         # determinism checks); decisions are identical.
         self.legacy_scan = legacy_scan
+        # --- coalesced scheduling rounds (the event→decision hot path) ---
+        # Events do not run a round inline: they call request_schedule(),
+        # which marks the scheduler pending; the driver (simulator, CWSI
+        # clock advance, executor poll loop) drains every same-timestamp
+        # event and then runs ONE round via schedule_pending(), collapsing
+        # a W-wide same-timestamp completion burst from W rounds into 1.
+        # sync_schedule=True restores the round-per-event cadence for
+        # baseline benchmarking. Whole-DAG submission stays a synchronous
+        # barrier in both modes (each tenant's DAG is answered by a round
+        # of its own, which pins multi-tenant same-timestamp submission
+        # decisions to the sync cadence).
+        self.sync_schedule = sync_schedule
+        self._sched_pending = False
+        self.sched_round_events = 0    # schedule requests absorbed by rounds
         self.sched_rounds = 0
+        # engine-issued launch ids: on_task_started/on_task_finished reports
+        # carrying a stale id (a dead launch racing its relaunch) are
+        # rejected without the adapter needing its own generation masking
+        self._launch_seq = itertools.count(1)
         # --- inter-workflow arbitration (arbiter.py) ---
         # the arbiter interleaves per-workflow priority lists; shares feed
         # fair-share / strict-priority policies (CWSI PUT .../share)
@@ -170,6 +217,24 @@ class CommonWorkflowScheduler:
         )
         self.workflow_shares: Dict[str, float] = {}
         self.arbiter_rounds = 0
+        # --- incremental arbiter accounting ---
+        # Cluster totals and per-workflow dominant-resource usage are
+        # maintained as deltas on launch/release (and recharged on the
+        # rare node join/leave), not rescanned per round. Per workflow we
+        # keep the charged cost of each running allocation in insertion
+        # order and re-sum only workflows whose allocation set changed —
+        # structurally the same float additions as the old global rescan,
+        # so the resulting usage values are bit-identical.
+        self._totals_cache: Optional[Dict[str, float]] = None
+        self._usage_costs: Dict[str, Dict[str, float]] = {}
+        self._usage_cache: Dict[str, float] = {}
+        self._usage_dirty: Dict[str, None] = {}
+        self._charges_stale = False    # totals moved: recharge every entry
+        self.usage_delta_ops = 0       # incremental charge/discharge ops
+        self.usage_scan_ops = 0        # allocation entries (re-)summed
+        # --- patch-based node views ---
+        self.view_snapshots = 0        # whole-node view() materialisations
+        self.view_patches = 0          # single-node in-place view updates
         # --- placement feasibility index ---
         # Ready tasks bucket by resource-demand signature
         # (chips, cpus, mem_alloc). A bucket no up-node can fit is recorded
@@ -195,12 +260,13 @@ class CommonWorkflowScheduler:
             chips_free=info.chips,
         )
         self._capacity_version += 1
+        self._invalidate_totals()
         self.provenance.record_node_event(NodeEvent(info.name, now, "UP"))
         if self.predictor is not None:
             self.predictor.register_node_bench(
                 NodeProfile(info.name, info.speed_factor)
             )
-        self.schedule(now)
+        self.request_schedule(now)
 
     def remove_node(self, name: str, now: float = 0.0) -> None:
         """Node failure / scale-in: requeue everything running there.
@@ -216,6 +282,7 @@ class CommonWorkflowScheduler:
         if st is None:
             return
         st.up = False
+        self._invalidate_totals()
         self.provenance.record_node_event(NodeEvent(name, now, "DOWN"))
         victims = [tid for tid, a in self.allocations.items() if a.node == name]
         for tid in victims:
@@ -239,7 +306,7 @@ class CommonWorkflowScheduler:
                 )
         del self.nodes[name]
         self._capacity_version += 1
-        self.schedule(now)
+        self.request_schedule(now)
 
     def set_node_speed(self, name: str, speed_factor: float, now: float = 0.0) -> None:
         if name in self.nodes:
@@ -294,16 +361,21 @@ class CommonWorkflowScheduler:
             # replacing an idle workflow: drop the old DAG's queued tasks
             for tid in [t for t, task in self._ready.items()
                         if task.spec.workflow_id == dag.workflow_id]:
-                del self._ready[tid]
+                self._ready_discard(tid, dag.workflow_id)
             # version-keyed caches (e.g. HEFT's rank memo) are scoped by
             # workflow id: keep versions monotonic across the replacement
             # so the new DAG can never collide with the old one's entries
             dag.version = max(dag.version, old.version + 1)
+            # the old DAG is gone: release strategy/order caches keyed to it
+            self._evict_workflow_caches(dag.workflow_id)
         self.dags[dag.workflow_id] = dag
         self.provenance.register_workflow(dag.workflow_id, {"name": dag.name})
         for t in dag.tasks.values():
             t.submit_time = now
         self._mark_dirty(dag.workflow_id)
+        # whole-DAG submission is a synchronous scheduling barrier even in
+        # coalesced mode (see __init__): the round runs inline
+        self.sched_round_events += 1
         self.schedule(now)
 
     def set_workflow_strategy(self, workflow_id: str,
@@ -314,7 +386,15 @@ class CommonWorkflowScheduler:
         other workflows keep the scheduler-wide strategy.
         """
         strat = make_strategy(strategy) if isinstance(strategy, str) else strategy
+        old = self.workflow_strategies.get(workflow_id)
         self.workflow_strategies[workflow_id] = strat
+        # the cached order was computed by the previous strategy — drop it
+        # (the id()-based cache key cannot be trusted across a strategy
+        # object's lifetime) and let the replaced override release any
+        # per-workflow state of its own
+        self._order_cache.pop(workflow_id, None)
+        if old is not None and old is not strat and old is not self.strategy:
+            old.on_workflow_done(workflow_id)
         return strat
 
     def _strategy_for(self, task: Task) -> Strategy:
@@ -349,25 +429,91 @@ class CommonWorkflowScheduler:
         )
         return self.arbiter
 
+    def _invalidate_totals(self) -> None:
+        """Node membership/up-state changed: totals and every allocation's
+        dominant-cost charge (a fraction *of those totals*) are stale."""
+        self._totals_cache = None
+        self._charges_stale = True
+
     def _cluster_totals(self) -> Dict[str, float]:
-        up = [st.info for st in self.nodes.values() if st.up]
-        return {
-            "cpus": sum(i.cpus for i in up),
-            "mem": float(sum(i.mem_bytes for i in up)),
-            "chips": float(sum(i.chips for i in up)),
-        }
+        # recomputed only after node join/leave — same iteration order as
+        # the old per-round scan, so the floats are bit-identical
+        if self._totals_cache is None:
+            up = [st.info for st in self.nodes.values() if st.up]
+            self._totals_cache = {
+                "cpus": sum(i.cpus for i in up),
+                "mem": float(sum(i.mem_bytes for i in up)),
+                "chips": float(sum(i.chips for i in up)),
+            }
+        return self._totals_cache
+
+    def _charge_usage(self, task_id: str, wid: str, cpus: float, mem: int,
+                      chips: int) -> None:
+        if self.legacy_scan:
+            return              # baseline cost model: rescan per read
+        cost = dominant_cost(cpus, mem, chips, self._cluster_totals())
+        self._usage_costs.setdefault(wid, {})[task_id] = cost
+        self._usage_dirty[wid] = None
+        self.usage_delta_ops += 1
+
+    def _discharge_usage(self, task_id: str, wid: str) -> None:
+        if self.legacy_scan:
+            return
+        entries = self._usage_costs.get(wid)
+        if entries is None or entries.pop(task_id, None) is None:
+            return
+        if not entries:
+            del self._usage_costs[wid]
+        self._usage_dirty[wid] = None
+        self.usage_delta_ops += 1
 
     def _workflow_usage(
         self, totals: Optional[Dict[str, float]] = None
     ) -> Dict[str, float]:
-        """Dominant-resource usage of *running allocations*, per workflow."""
+        """Dominant-resource usage of *running allocations*, per workflow.
+
+        ``legacy_scan`` keeps the pre-incremental full rescan; the live
+        path re-sums only workflows whose allocation set changed since the
+        last read. Each workflow's entries are kept (and summed) in global
+        allocation insertion order restricted to that workflow — the exact
+        addition sequence of the full rescan — so both paths produce
+        bit-identical floats (the hypothesis suite pins this).
+        """
         if totals is None:
             totals = self._cluster_totals()
-        usage: Dict[str, float] = {}
-        for alloc in self.allocations.values():
-            cost = dominant_cost(alloc.cpus, alloc.mem, alloc.chips, totals)
-            usage[alloc.workflow_id] = usage.get(alloc.workflow_id, 0.0) + cost
-        return usage
+        if self.legacy_scan:
+            usage: Dict[str, float] = {}
+            for alloc in self.allocations.values():
+                self.usage_scan_ops += 1
+                cost = dominant_cost(alloc.cpus, alloc.mem, alloc.chips,
+                                     totals)
+                usage[alloc.workflow_id] = (
+                    usage.get(alloc.workflow_id, 0.0) + cost)
+            return usage
+        if self._charges_stale:
+            # node join/leave: every charge is a fraction of the new
+            # totals — rebuild all entries from the allocation map (rare)
+            self._usage_costs.clear()
+            for task_id, alloc in self.allocations.items():
+                self.usage_scan_ops += 1
+                self._usage_costs.setdefault(alloc.workflow_id, {})[
+                    task_id
+                ] = dominant_cost(alloc.cpus, alloc.mem, alloc.chips, totals)
+            self._usage_cache.clear()
+            self._usage_dirty = dict.fromkeys(self._usage_costs)
+            self._charges_stale = False
+        for wid in self._usage_dirty:
+            entries = self._usage_costs.get(wid)
+            if not entries:
+                self._usage_cache.pop(wid, None)
+                continue
+            total = 0.0
+            for cost in entries.values():
+                self.usage_scan_ops += 1
+                total += cost
+            self._usage_cache[wid] = total
+        self._usage_dirty.clear()
+        return dict(self._usage_cache)
 
     def _arbiter_context(self, ctx: SchedulingContext) -> ArbiterContext:
         return ArbiterContext(
@@ -378,7 +524,40 @@ class CommonWorkflowScheduler:
             appearance_fn=lambda: {wid: i for i, wid in enumerate(self.dags)},
             usage_fn=self._workflow_usage,
             totals_fn=self._cluster_totals,
+            keyed_queue_fn=(
+                None if self.legacy_scan
+                else lambda wid, tasks: self._keyed_queue(wid, tasks, ctx)),
         )
+
+    def _keyed_queue(
+        self, wid: str, tasks: List[Task], ctx: SchedulingContext
+    ) -> Optional[List[Tuple[Any, Task]]]:
+        """Cached sorted (priority key, task) queue for one workflow.
+
+        Valid while the strategy's token (DAG/predictor versions) and the
+        workflow's ready-bucket membership are unchanged. Keys carry the
+        task's promotion sequence as a final component, so they are a
+        total order and cached results are exactly the stable sort the
+        strategy's prioritize() would produce. Returns None (→ caller
+        falls back to prioritize()) for strategies with round-varying
+        priorities.
+        """
+        strat = self.workflow_strategies.get(wid, self.strategy)
+        token = strat.priority_token(ctx, self.dags.get(wid))
+        if token is None:
+            return None
+        cache_key = (id(strat), token, self._bucket_version.get(wid, 0))
+        hit = self._order_cache.get(wid)
+        if hit is not None and hit[0] == cache_key:
+            self.priority_cache_hits += 1
+            return hit[1]
+        self.priority_sorts += 1
+        keyed = sorted(
+            ((strat.priority_key(t, ctx) + (t.ready_seq,), t) for t in tasks),
+            key=lambda kv: kv[0],
+        )
+        self._order_cache[wid] = (cache_key, keyed)
+        return keyed
 
     def arbiter_status(self) -> Dict[str, Any]:
         """Status document for the CWSI ``GET /arbiter`` endpoint."""
@@ -402,6 +581,69 @@ class CommonWorkflowScheduler:
         self._queue_dirty = True
         self._dirty_dags[workflow_id] = None
 
+    # ------------------------------------------------------------------
+    # coalesced scheduling rounds
+    # ------------------------------------------------------------------
+    def request_schedule(self, now: float) -> int:
+        """An event asked for a scheduling round.
+
+        In the default coalesced mode this only marks the scheduler
+        pending — the driver drains every same-timestamp event and then
+        runs one round via ``schedule_pending``. With ``sync_schedule``
+        the round runs inline (the pre-coalescing cadence)."""
+        self.sched_round_events += 1
+        if self.sync_schedule:
+            return self.schedule(now)
+        self._sched_pending = True
+        return 0
+
+    def schedule_pending(self, now: float) -> int:
+        """Run the deferred round, if any event requested one."""
+        if not self._sched_pending:
+            return 0
+        return self.schedule(now)
+
+    # ------------------------------------------------------------------
+    # ready-queue maintenance (global dict + per-workflow buckets)
+    # ------------------------------------------------------------------
+    def _ready_add(self, task: Task) -> None:
+        tid, wid = task.task_id, task.spec.workflow_id
+        old = self._ready.get(tid)
+        if old is not None and old.spec.workflow_id != wid:
+            # task-id collision across workflows: _ready is keyed by task
+            # id, so the newcomer evicts the holder — the holder's cached
+            # order is stale too
+            self._bucket_version[old.spec.workflow_id] = (
+                self._bucket_version.get(old.spec.workflow_id, 0) + 1)
+        task.ready_seq = next(self._ready_seq)
+        self._ready[tid] = task
+        self._bucket_version[wid] = self._bucket_version.get(wid, 0) + 1
+
+    def _ready_discard(self, tid: str, wid: str) -> None:
+        cur = self._ready.get(tid)
+        if cur is None:
+            return
+        if cur.spec.workflow_id != wid:
+            # the id is held by ANOTHER workflow's task (cross-workflow
+            # task-id collision): not ours to drop — blindly popping here
+            # would silently unqueue the other tenant's ready task
+            return
+        del self._ready[tid]
+        self._bucket_version[wid] = self._bucket_version.get(wid, 0) + 1
+
+    def _evict_workflow_caches(self, wid: str) -> None:
+        """A workflow completed or was replaced: drop caches keyed to it
+        (HEFT rank memos, sorted-queue cache) so a long-lived scheduler
+        does not leak one entry per workflow ever scheduled."""
+        self._order_cache.pop(wid, None)
+        # safe to drop alongside the cache entry: a later re-add restarts
+        # the version at 1 with no cached order to mismatch against
+        self._bucket_version.pop(wid, None)
+        self.strategy.on_workflow_done(wid)
+        override = self.workflow_strategies.get(wid)
+        if override is not None and override is not self.strategy:
+            override.on_workflow_done(wid)
+
     def task_state(self, workflow_id: str, task_id: str) -> TaskState:
         return self.dags[workflow_id].task(task_id).state
 
@@ -411,9 +653,14 @@ class CommonWorkflowScheduler:
     # ------------------------------------------------------------------
     # execution callbacks (from the resource manager)
     # ------------------------------------------------------------------
-    def on_task_started(self, task_id: str, now: float) -> None:
+    def on_task_started(self, task_id: str, now: float,
+                        launch_id: Optional[int] = None) -> None:
         task = self._find_task(task_id)
         if task is None:
+            return
+        if launch_id is not None and launch_id != task.launch_id:
+            # report from a dead launch (node lost, task relaunched
+            # elsewhere): only the live launch may flip state
             return
         if task.state != TaskState.SCHEDULED:
             # only a scheduled launch may start. Anything else is a late
@@ -425,9 +672,16 @@ class CommonWorkflowScheduler:
         task.state = TaskState.RUNNING
         task.start_time = now
 
-    def on_task_finished(self, task_id: str, now: float, result: TaskResult) -> None:
+    def on_task_finished(self, task_id: str, now: float, result: TaskResult,
+                         launch_id: Optional[int] = None) -> None:
         task = self._find_task(task_id)
         if task is None:
+            return
+        if launch_id is not None and launch_id != task.launch_id:
+            # completion report from a dead launch (the task was requeued
+            # and relaunched elsewhere): a late *success* here would settle
+            # the task and release the live launch's allocation — the
+            # protocol hole flagged in the CWSI rev, closed by the id
             return
         if task_id not in self.spec_copies and task.state.terminal:
             # duplicate/late completion report (e.g. a kill racing a real
@@ -445,7 +699,7 @@ class CommonWorkflowScheduler:
             self._finish_success(task, now, result)
         else:
             self._handle_failure(task, now, result)
-        self.schedule(now)
+        self.request_schedule(now)
 
     # ------------------------------------------------------------------
     # the scheduling core
@@ -471,6 +725,7 @@ class CommonWorkflowScheduler:
         tasks in the same rounds and feed strategies the same ready sets,
         so scheduling decisions are identical.
         """
+        self._sched_pending = False
         self.sched_rounds += 1
         ready: List[Task] = []
         if self.legacy_scan:
@@ -483,7 +738,7 @@ class CommonWorkflowScheduler:
                     if dag is None:
                         continue
                     for task in dag.promote_runnable(now):
-                        self._ready[task.task_id] = task
+                        self._ready_add(task)
                 self._dirty_dags.clear()
                 self._queue_dirty = False
             ready = list(self._ready.values())
@@ -496,9 +751,12 @@ class CommonWorkflowScheduler:
         self.arbiter_rounds += 1
         ordered = self.arbiter.order(ready, self._arbiter_context(ctx))
         launched = 0
-        # node views only change when a launch consumes resources, so one
-        # snapshot serves every unplaced task in between
+        # node views only change when a launch consumes resources: the
+        # live path snapshots once and then patches only the launched-on
+        # node's view after each launch; legacy_scan re-snapshots all N
+        # views per launch (the pre-patch cost model)
         views: Optional[List[NodeView]] = None
+        view_slot: Dict[str, int] = {}
         # memory caps at the largest up-node, constant within a round
         mem_cap = max((st.info.mem_bytes for st in self.nodes.values()
                        if st.up), default=0)
@@ -512,6 +770,8 @@ class CommonWorkflowScheduler:
         for task in ordered:
             if views is None:
                 views = [st.view() for st in self.nodes.values() if st.up]
+                view_slot = {v.name: i for i, v in enumerate(views)}
+                self.view_snapshots += len(views)
                 feasible = set()
             if not views:
                 break
@@ -542,7 +802,16 @@ class CommonWorkflowScheduler:
             if node is None:
                 continue
             self._launch(task, node, mem_alloc, now)
-            views = None
+            if self.legacy_scan:
+                views = None
+            else:
+                # patch only the launched-on node's view — the other N-1
+                # nodes did not change. Feasible marks are tied to the
+                # snapshot they were probed against, so they reset (the
+                # infeasible index persists: capacity only shrank).
+                views[view_slot[node]] = self.nodes[node].view()
+                self.view_patches += 1
+                feasible = set()
             launched += 1
         if self.enable_speculation:
             self.check_speculation(now)
@@ -576,8 +845,11 @@ class CommonWorkflowScheduler:
         st.chips_free -= res.chips
         self.allocations[task.task_id] = _Allocation(
             node, cpus, mem_alloc, res.chips, task.spec.workflow_id)
+        self._charge_usage(task.task_id, task.spec.workflow_id,
+                           cpus, mem_alloc, res.chips)
         self.mem_allocated[task.task_id] = mem_alloc
-        self._ready.pop(task.task_id, None)
+        self._ready_discard(task.task_id, task.spec.workflow_id)
+        task.launch_id = next(self._launch_seq)
         task.state = TaskState.SCHEDULED
         task.node = node
         task.schedule_time = now
@@ -590,6 +862,7 @@ class CommonWorkflowScheduler:
         alloc = self.allocations.pop(task_id, None)
         if alloc is None:
             return
+        self._discharge_usage(task_id, alloc.workflow_id)
         st = self.nodes.get(alloc.node)
         if st is not None:
             st.cpus_free = min(st.cpus_free + alloc.cpus, st.info.cpus)
@@ -627,7 +900,7 @@ class CommonWorkflowScheduler:
         # a task can be credited by a winning speculative copy while its
         # requeued original still sits READY and unplaced — drop it from
         # the queue or it would be launched again after succeeding
-        self._ready.pop(task.task_id, None)
+        self._ready_discard(task.task_id, task.spec.workflow_id)
         self._record(task, "SUCCEEDED", result)
         self.mem_allocated.pop(task.task_id, None)
         # outputs become resident on the executing node (data locality)
@@ -657,8 +930,10 @@ class CommonWorkflowScheduler:
         dag = self.dags[task.spec.workflow_id]
         if dag.on_task_succeeded(task.task_id):
             self._mark_dirty(dag.workflow_id)
-        if dag.finished() and self.on_workflow_done is not None:
-            self.on_workflow_done(dag.workflow_id)
+        if dag.finished():
+            self._evict_workflow_caches(dag.workflow_id)
+            if self.on_workflow_done is not None:
+                self.on_workflow_done(dag.workflow_id)
 
     def _propagate_locations(self, task: Task) -> None:
         """Children's matching inputs inherit the producing node (for HEFT's
@@ -684,17 +959,25 @@ class CommonWorkflowScheduler:
             task.state = TaskState.ERROR
             task.failure_reason = result.reason
             self.mem_allocated.pop(task.task_id, None)
-            self._ready.pop(task.task_id, None)
+            self._ready_discard(task.task_id, task.spec.workflow_id)
             log.warning("task %s permanently failed: %s", task.task_id, result.reason)
             dag = self.dags[task.spec.workflow_id]
-            if dag.finished() and self.on_workflow_done is not None:
-                self.on_workflow_done(dag.workflow_id)
+            dag.on_task_error(task.task_id)
+            if dag.finished():
+                self._evict_workflow_caches(dag.workflow_id)
+                if self.on_workflow_done is not None:
+                    self.on_workflow_done(dag.workflow_id)
             return
         task.state = TaskState.READY
         task.node = None
         task.failure_reason = result.reason
+        # the old launch is dead the moment the task is requeued: burn a
+        # fresh launch id NOW so the dead launch's late reports are
+        # rejected in the requeue→relaunch window too, not only after
+        # the relaunch stamps its own id
+        task.launch_id = next(self._launch_seq)
         # retry: straight back onto the ready queue (ready_time unchanged)
-        self._ready[task.task_id] = task
+        self._ready_add(task)
 
     # ------------------------------------------------------------------
     # straggler mitigation: speculative execution
@@ -786,15 +1069,24 @@ class CommonWorkflowScheduler:
             "ready": len(self._ready),
             "placement_probes": self.placement_probes,
             "arbiter_rounds": self.arbiter_rounds,
+            "sync_schedule": self.sync_schedule,
+            "schedule_pending": self._sched_pending,
         }
 
     def op_counts(self) -> Dict[str, int]:
         """Scheduling-overhead counters (see bench_sched_scale.py)."""
         return {
             "rounds": self.sched_rounds,
+            "sched_round_events": self.sched_round_events,
             "readiness_ops": sum(d.readiness_ops for d in self.dags.values()),
             "rank_ops": sum(d.rank_ops for d in self.dags.values()),
             "placement_probes": self.placement_probes,
             "feasibility_checks": self.feasibility_checks,
             "arbiter_rounds": self.arbiter_rounds,
+            "usage_delta_ops": self.usage_delta_ops,
+            "usage_scan_ops": self.usage_scan_ops,
+            "view_snapshots": self.view_snapshots,
+            "view_patches": self.view_patches,
+            "priority_sorts": self.priority_sorts,
+            "priority_cache_hits": self.priority_cache_hits,
         }

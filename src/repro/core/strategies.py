@@ -87,6 +87,42 @@ class Strategy(ABC):
     def on_task_finished(self, task: Task, ctx: SchedulingContext) -> None:
         pass
 
+    # hook for strategies that cache per-workflow state (e.g. HEFT's rank
+    # memo): called when a workflow completes or is replaced, so caches do
+    # not accumulate one entry per workflow ever scheduled
+    def on_workflow_done(self, workflow_id: str) -> None:
+        pass
+
+    # ------------------------------------------------------------------
+    # cacheable priorities (the engine's per-workflow order cache)
+    # ------------------------------------------------------------------
+    # A strategy whose prioritize() is ``sorted(tasks, key=priority_key)``
+    # with a key that is a pure function of (task, token) may declare it
+    # here; the engine then caches each workflow's sorted ready queue and
+    # only re-sorts when the token (e.g. the DAG version) or the queue
+    # membership changes, instead of re-sorting the whole ready set every
+    # scheduling round. ``None`` (the default) means "not cacheable":
+    # prioritize() is called fresh each round, preserving the behaviour of
+    # strategies with round-varying keys (e.g. FairStrategy) and of any
+    # out-of-tree subclass that predates these hooks.
+    def priority_token(self, ctx: SchedulingContext,
+                       dag: Optional[WorkflowDAG]) -> Optional[tuple]:
+        return None
+
+    def priority_key(self, task: Task, ctx: SchedulingContext) -> tuple:
+        raise NotImplementedError(
+            f"{self.name} declares no cacheable priority key")
+
+    def _prioritize_by_key(self, tasks: List[Task],
+                           ctx: SchedulingContext) -> List[Task]:
+        """Shared prioritize() body for key-declaring strategies, so the
+        cached (engine) and fresh (this) paths sort by the SAME key —
+        divergence between the two would change decisions only on
+        cache-warm rounds."""
+        keyed = [(self.priority_key(t, ctx), t) for t in tasks]
+        keyed.sort(key=lambda kv: kv[0])
+        return [t for _, t in keyed]
+
 
 # ---------------------------------------------------------------------------
 # placement helpers
@@ -140,7 +176,13 @@ class OriginalStrategy(Strategy):
     name = "original"
 
     def prioritize(self, tasks: List[Task], ctx: SchedulingContext) -> List[Task]:
-        return sorted(tasks, key=lambda t: (t.ready_time, t.submit_time, t.task_id))
+        return self._prioritize_by_key(tasks, ctx)
+
+    def priority_token(self, ctx, dag):
+        return ()               # FIFO keys are static once a task is ready
+
+    def priority_key(self, task: Task, ctx: SchedulingContext) -> tuple:
+        return (task.ready_time, task.submit_time, task.task_id)
 
     def place(self, task: Task, nodes: List[NodeView],
               ctx: SchedulingContext) -> Optional[str]:
@@ -164,7 +206,13 @@ class FIFORoundRobin(Strategy):
         self._rr = _RoundRobinPlacer()
 
     def prioritize(self, tasks: List[Task], ctx: SchedulingContext) -> List[Task]:
-        return sorted(tasks, key=lambda t: (t.ready_time, t.submit_time, t.task_id))
+        return self._prioritize_by_key(tasks, ctx)
+
+    def priority_token(self, ctx, dag):
+        return ()
+
+    def priority_key(self, task: Task, ctx: SchedulingContext) -> tuple:
+        return (task.ready_time, task.submit_time, task.task_id)
 
     def place(self, task, nodes, ctx):
         return self._rr.pick(task, nodes)
@@ -186,14 +234,18 @@ class RankStrategy(Strategy):
         self._rr = _RoundRobinPlacer()
 
     def prioritize(self, tasks: List[Task], ctx: SchedulingContext) -> List[Task]:
-        keyed = []
-        for t in tasks:
-            rank = ctx.dag_of(t).ranks()[t.task_id]
-            size = t.spec.input_size
-            tie = size if self.tie == "min" else -size
-            keyed.append(((-rank, tie, t.ready_time, t.task_id), t))
-        keyed.sort(key=lambda kv: kv[0])
-        return [t for _, t in keyed]
+        return self._prioritize_by_key(tasks, ctx)
+
+    def priority_token(self, ctx, dag):
+        # ranks and input sizes only move when the DAG mutates (edges,
+        # in-place input relocation → touch()), all covered by its version
+        return None if dag is None else (dag.version,)
+
+    def priority_key(self, task: Task, ctx: SchedulingContext) -> tuple:
+        rank = ctx.dag_of(task).ranks()[task.task_id]
+        size = task.spec.input_size
+        tie = size if self.tie == "min" else -size
+        return (-rank, tie, task.ready_time, task.task_id)
 
     def place(self, task, nodes, ctx):
         return self._rr.pick(task, nodes)
@@ -217,8 +269,13 @@ class HEFTStrategy(Strategy):
 
     def __init__(self, memo: bool = True) -> None:
         self._memo_enabled = memo
-        # wid -> ((dag.version, predictor.version), ranks)
+        # wid -> ((dag.version, predictor.version), ranks); evicted via
+        # on_workflow_done so a long-lived scheduler does not accumulate
+        # one ranks dict per workflow ever scheduled
         self._memo: Dict[str, tuple] = {}
+
+    def on_workflow_done(self, workflow_id: str) -> None:
+        self._memo.pop(workflow_id, None)
 
     def _weighted_ranks(self, dag: WorkflowDAG,
                         ctx: SchedulingContext) -> Dict[str, float]:
@@ -242,14 +299,21 @@ class HEFTStrategy(Strategy):
         return ranks
 
     def prioritize(self, tasks: List[Task], ctx: SchedulingContext) -> List[Task]:
+        return self._prioritize_by_key(tasks, ctx)
+
+    def priority_token(self, ctx, dag):
+        if dag is None:
+            return None
+        if ctx.predictor is None:       # RankStrategy("min") fallback path
+            return (0, dag.version)
+        return (1, dag.version, ctx.predictor.version)
+
+    def priority_key(self, task: Task, ctx: SchedulingContext) -> tuple:
         if ctx.predictor is None:
-            return RankStrategy("min").prioritize(tasks, ctx)
-        keyed = []
-        for t in tasks:
-            rank = self._weighted_ranks(ctx.dag_of(t), ctx)[t.task_id]
-            keyed.append(((-rank, t.ready_time, t.task_id), t))
-        keyed.sort(key=lambda kv: kv[0])
-        return [t for _, t in keyed]
+            rank = ctx.dag_of(task).ranks()[task.task_id]
+            return (-rank, task.spec.input_size, task.ready_time, task.task_id)
+        rank = self._weighted_ranks(ctx.dag_of(task), ctx)[task.task_id]
+        return (-rank, task.ready_time, task.task_id)
 
     def place(self, task: Task, nodes: List[NodeView],
               ctx: SchedulingContext) -> Optional[str]:
@@ -323,7 +387,14 @@ class TaremaStrategy(Strategy):
 
     # -- strategy --
     def prioritize(self, tasks: List[Task], ctx: SchedulingContext) -> List[Task]:
-        return RankStrategy("min").prioritize(tasks, ctx)
+        return self._prioritize_by_key(tasks, ctx)     # rank-min ordering
+
+    def priority_token(self, ctx, dag):
+        return None if dag is None else (dag.version,)
+
+    def priority_key(self, task: Task, ctx: SchedulingContext) -> tuple:
+        rank = ctx.dag_of(task).ranks()[task.task_id]
+        return (-rank, task.spec.input_size, task.ready_time, task.task_id)
 
     def place(self, task: Task, nodes: List[NodeView],
               ctx: SchedulingContext) -> Optional[str]:

@@ -355,6 +355,7 @@ def test_index_skips_unplaceable_backlog_without_changing_decisions():
     # launches, costing O(1) probes — not O(backlog)
     from repro.core.scheduler import TaskResult
     cws.on_task_finished("w.t0", now=2.0, result=TaskResult(True))
+    cws.schedule_pending(now=2.0)       # drain the coalesced round
     assert len(cws.allocations) == 2
     assert cws.placement_probes <= probes_after_submit + 2
 
@@ -394,6 +395,7 @@ def test_infeasible_bucket_cleared_on_node_join():
     assert dag.task("w.big").state == TaskState.READY
     assert len(cws._infeasible) == 1
     cws.add_node(NodeInfo("big", cpus=8, mem_bytes=32 * GiB), now=1.0)
+    cws.schedule_pending(now=1.0)       # drain the coalesced round
     assert dag.task("w.big").state == TaskState.SCHEDULED
     assert cws.allocations["w.big"].node == "big"
 

@@ -72,6 +72,7 @@ def _snapshot(cws):
         sorted(cws._ready),
         sorted(cws.allocations),
         len(cws.provenance.task_traces),
+        cws._sched_pending,
     )
 
 
@@ -87,6 +88,7 @@ ENDPOINTS = [
     ("PUT", "/v1/workflow/{wid}/share", {"share": 2.5}, 200),
     ("GET", "/v1/arbiter", None, 200),
     ("PUT", "/v1/arbiter", {"arbiter": "fair_share"}, 200),
+    ("GET", "/v1/stats", None, 200),
     ("GET", "/v1/provenance/task/proc", None, 200),
     ("GET", "/v1/provenance/workflow/{wid}", None, 200),
     ("GET", "/v1/predict/runtime", {"name": "proc", "inputSize": GiB}, 200),
@@ -157,6 +159,8 @@ BAD_PATHS = [
     ("GET", "/v1/predict/runtime/x", 404),
     ("GET", "/v1/metrics", 404),
     ("GET", "/v1/arbiter/extra", 404),
+    ("GET", "/v1/stats/extra", 404),
+    ("GET", "/v1/stat", 404),
     ("PUT", "/v1/workflow/w0/share/extra", 404),
     ("PUT", "/v1/workflow/w0/nosuch", 404),
 ]
@@ -264,6 +268,21 @@ def test_rejected_submit_does_not_register_the_workflow(rig):
                _task_body("g.t0"))
     assert out["status"] == 200
     assert "ghost-wf" in cws.dags
+
+
+def test_stats_endpoint_is_read_only_and_complete(rig):
+    sim, cws, server = rig
+    _req(server, "POST", "/v1/workflow/w0", {"name": "w0"})
+    _req(server, "POST", "/v1/workflow/w0/task", _task_body("w0.t0"))
+    before = _snapshot(cws)
+    out = _req(server, "GET", "/v1/stats")
+    assert out["status"] == 200
+    counts = out["body"]["opCounts"]
+    assert {"rounds", "sched_round_events", "usage_delta_ops",
+            "usage_scan_ops", "view_snapshots", "view_patches",
+            "priority_sorts", "priority_cache_hits"} <= set(counts)
+    # reading counters must not run rounds or mutate anything
+    assert _snapshot(cws) == before
 
 
 def test_share_and_arbiter_roundtrip(rig):

@@ -1,0 +1,479 @@
+"""Constant-time event path: coalescing, incremental accounting, launch ids.
+
+Pins the PR 3 invariants:
+  * coalesced rounds (default) make bit-identical decisions to the
+    ``sync_schedule=True`` round-per-event cadence, with fewer rounds on
+    same-timestamp completion bursts,
+  * incrementally maintained per-workflow usage equals a from-scratch
+    recount (float-exact) under random launch/release/node-churn,
+  * the per-workflow priority-order cache reproduces the strategies'
+    prioritize() orders exactly (including ties),
+  * stale-launch completion reports are rejected by the engine itself
+    (the ROADMAP "late success releases live allocation" hole),
+  * ``dag.finished()`` (now counter-based) always matches the full scan,
+  * HEFT's rank memo is evicted on workflow completion/replacement,
+  * CWSI task submits batch into one round per clock instant.
+"""
+import numpy as np
+import pytest
+
+from repro.cluster import (
+    ClusterSimulator,
+    SimConfig,
+    build_workflow,
+    heterogeneous_cluster,
+)
+from repro.cluster.nodes import cpu_node
+from repro.core import (
+    CWSIClient,
+    CWSIServer,
+    CommonWorkflowScheduler,
+    DataRef,
+    LotaruPredictor,
+    NodeInfo,
+    Resources,
+    TaskSpec,
+    TaskState,
+    WorkflowDAG,
+)
+from repro.core.arbiter import dominant_cost
+from repro.core.scheduler import TaskResult
+from repro.core.strategies import HEFTStrategy
+
+GiB = 1 << 30
+
+
+class _NullAdapter:
+    def launch(self, task, node, mem_alloc):
+        pass
+
+    def kill(self, task_id):
+        pass
+
+
+# ---------------------------------------------------------------------------
+# coalesced rounds: decisions identical, rounds fewer
+# ---------------------------------------------------------------------------
+def _burst_dag(wid, width, stages):
+    dag = WorkflowDAG(wid)
+    prev = []
+    for s in range(stages):
+        cur = []
+        for i in range(width):
+            tid = f"{wid}.s{s}.t{i}"
+            dag.add_task(TaskSpec(task_id=tid, name=f"stage{s}",
+                                  resources=Resources(cpus=1.0,
+                                                      mem_bytes=GiB),
+                                  base_runtime_s=10.0),
+                         deps=(prev[i],) if prev else ())
+            cur.append(tid)
+        prev = cur
+    return dag
+
+
+def _run_burst(sync):
+    nodes = [cpu_node(f"n{i}", cpus=2.0, mem_gib=16) for i in range(2)]
+    sim = ClusterSimulator(nodes, SimConfig(seed=3, runtime_noise_sigma=0.0))
+    cws = CommonWorkflowScheduler(adapter=sim, strategy="fifo_rr",
+                                  arbiter="fair_share", sync_schedule=sync)
+    sim.attach(cws)
+    dags = [_burst_dag(f"wf-{i}", 4, 2) for i in range(2)]
+    for d in dags:
+        sim.submit_workflow_at(0.0, d)
+    sim.run()
+    assert all(d.succeeded() for d in dags)
+    trace = sorted((t.task_id, round(t.start_time, 9), round(t.end_time, 9))
+                   for d in dags for t in d.tasks.values())
+    return trace, cws.sched_rounds
+
+
+def test_coalesced_rounds_match_sync_cadence_on_bursts():
+    trace_sync, rounds_sync = _run_burst(sync=True)
+    trace_coal, rounds_coal = _run_burst(sync=False)
+    assert trace_sync == trace_coal
+    # 4-wide same-timestamp completion bursts collapse into single rounds
+    assert rounds_coal * 2 <= rounds_sync, (rounds_sync, rounds_coal)
+
+
+@pytest.mark.parametrize("strategy", ["rank_min_rr", "heft", "original"])
+def test_coalesced_rounds_match_sync_cadence_on_noisy_workload(strategy):
+    """Continuous runtimes (no same-timestamp bursts): cadences coincide
+    round for round, so traces must match trivially — this guards the
+    flush placement (one round per virtual instant, same ``now``)."""
+    results = []
+    for sync in (True, False):
+        dag = build_workflow("chipseq", seed=11, n_samples=3)
+        sim = ClusterSimulator(heterogeneous_cluster(3), SimConfig(seed=11))
+        cws = CommonWorkflowScheduler(adapter=sim, strategy=strategy,
+                                      predictor=LotaruPredictor(),
+                                      sync_schedule=sync)
+        sim.attach(cws)
+        sim.submit_workflow_at(0.0, dag)
+        sim.run()
+        assert dag.succeeded()
+        results.append(sorted(
+            (t.task_id, t.node, round(t.start_time, 9))
+            for t in dag.tasks.values()))
+    assert results[0] == results[1]
+
+
+# ---------------------------------------------------------------------------
+# incremental usage accounting == from-scratch recount (hypothesis)
+# ---------------------------------------------------------------------------
+def _reference_usage(cws):
+    """The pre-incremental algorithm: one pass over the allocation map in
+    insertion order — the float-exact ground truth."""
+    totals = {
+        "cpus": sum(st.info.cpus for st in cws.nodes.values() if st.up),
+        "mem": float(sum(st.info.mem_bytes for st in cws.nodes.values()
+                         if st.up)),
+        "chips": float(sum(st.info.chips for st in cws.nodes.values()
+                           if st.up)),
+    }
+    usage = {}
+    for alloc in cws.allocations.values():
+        cost = dominant_cost(alloc.cpus, alloc.mem, alloc.chips, totals)
+        usage[alloc.workflow_id] = usage.get(alloc.workflow_id, 0.0) + cost
+    return totals, usage
+
+
+def _check_usage(cws):
+    totals, usage = _reference_usage(cws)
+    assert cws._cluster_totals() == totals
+    assert cws._workflow_usage() == usage   # float-exact, not approx
+
+
+def _usage_churn_case(seed, n_ops):
+    rng = np.random.default_rng(seed)
+    cws = CommonWorkflowScheduler(adapter=_NullAdapter(),
+                                  strategy="fifo_rr", arbiter="fair_share")
+    for i in range(3):
+        cws.add_node(NodeInfo(f"n{i}", cpus=4, mem_bytes=16 * GiB), now=0.0)
+    for w in range(3):
+        dag = WorkflowDAG(f"wf{w}")
+        for i in range(12):
+            dag.add_task(TaskSpec(
+                task_id=f"wf{w}.t{i}", name="p",
+                resources=Resources(cpus=float(rng.choice([1, 2])),
+                                    mem_bytes=int(rng.integers(1, 4)) * GiB),
+                max_retries=1))
+        cws.submit_workflow(dag, now=0.0)
+    _check_usage(cws)
+    spare = 3
+    for step in range(n_ops):
+        now = float(step + 1)
+        op = rng.choice(["finish", "fail", "join", "leave", "round"])
+        if op in ("finish", "fail") and cws.allocations:
+            tid = list(cws.allocations)[int(
+                rng.integers(0, len(cws.allocations)))]
+            cws.on_task_finished(tid, now, TaskResult(op == "finish"))
+        elif op == "join":
+            cws.add_node(NodeInfo(f"n{spare}", cpus=4,
+                                  mem_bytes=16 * GiB), now=now)
+            spare += 1
+        elif op == "leave" and len(cws.nodes) > 1:
+            name = list(cws.nodes)[int(rng.integers(0, len(cws.nodes)))]
+            cws.remove_node(name, now=now)
+        else:
+            cws.schedule_pending(now)
+        _check_usage(cws)
+        cws.schedule_pending(now)
+        _check_usage(cws)
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                           # pragma: no cover
+    @pytest.mark.parametrize("seed", [0, 1, 7, 42, 1234])
+    def test_incremental_usage_equals_recount_under_churn(seed):
+        """Deterministic fallback when hypothesis is unavailable."""
+        _usage_churn_case(seed, n_ops=60)
+else:
+    @settings(max_examples=25, deadline=None)
+    @given(seed=st.integers(0, 2 ** 31), n_ops=st.integers(5, 60))
+    def test_incremental_usage_equals_recount_under_churn(seed, n_ops):
+        _usage_churn_case(seed, n_ops)
+
+
+# ---------------------------------------------------------------------------
+# priority-order cache == fresh prioritize()
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("strategy", ["original", "fifo_rr", "rank_min_rr",
+                                      "rank_max_rr", "heft", "tarema",
+                                      "fair"])
+@pytest.mark.parametrize("arbiter", ["first_appearance", "fair_share",
+                                     "strict_priority"])
+def test_order_cache_matches_fresh_prioritize(strategy, arbiter):
+    """The arbiter's order with the engine's keyed-queue cache must equal
+    the order computed with the cache disabled (fresh prioritize calls),
+    across cache-warm and cache-invalidated rounds."""
+    rng = np.random.default_rng(5)
+    cws = CommonWorkflowScheduler(adapter=_NullAdapter(), strategy=strategy,
+                                  predictor=LotaruPredictor(),
+                                  arbiter=arbiter)
+    # a single 1-cpu node: almost everything stays READY (backlog regime)
+    cws.add_node(NodeInfo("n0", cpus=1, mem_bytes=4 * GiB), now=0.0)
+    for w in range(3):
+        dag = WorkflowDAG(f"wf{w}")
+        for i in range(15):
+            dag.add_task(TaskSpec(
+                task_id=f"wf{w}.t{i}", name=f"k{i % 3}",
+                inputs=(DataRef(f"d{i}", int(rng.integers(0, 3)) * GiB),),
+                resources=Resources(cpus=1.0, mem_bytes=GiB)))
+        cws.submit_workflow(dag, now=0.0)
+    cws.set_workflow_share("wf1", 3.0)
+
+    def orders(now):
+        ctx = cws._context(now)
+        ready = list(cws._ready.values())
+        cached = cws.arbiter.order(ready, cws._arbiter_context(ctx))
+        cws.legacy_scan = True       # disables the keyed-queue hook
+        fresh = cws.arbiter.order(ready, cws._arbiter_context(ctx))
+        cws.legacy_scan = False
+        return [t.task_id for t in cached], [t.task_id for t in fresh]
+
+    for now in (1.0, 2.0):           # second pass hits the warm cache
+        cached, fresh = orders(now)
+        assert cached == fresh
+    # invalidate: finish the running task → release + requeue churn
+    running = list(cws.allocations)
+    for tid in running:
+        cws.on_task_finished(tid, 3.0, TaskResult(True))
+    cws.schedule_pending(3.0)
+    cached, fresh = orders(4.0)
+    assert cached == fresh
+    if strategy != "fair":      # fair's keys vary per round: uncacheable
+        assert cws.priority_cache_hits > 0
+
+
+def test_strategy_override_switch_drops_cached_order():
+    """Swapping a workflow's strategy must invalidate its cached queue —
+    the cache key is id()-based, which cannot be trusted across strategy
+    object lifetimes."""
+    rng = np.random.default_rng(9)
+    cws = CommonWorkflowScheduler(adapter=_NullAdapter(),
+                                  strategy="rank_min_rr")
+    dag = WorkflowDAG("w")
+    for i in range(10):
+        dag.add_task(TaskSpec(
+            task_id=f"w.t{i}", name="p",
+            inputs=(DataRef(f"d{i}", int(rng.integers(1, 5)) * GiB),),
+            resources=Resources(cpus=1.0, mem_bytes=GiB)))
+    cws.submit_workflow(dag, now=0.0)       # no nodes: everything stays READY
+    ctx = cws._context(1.0)
+    ready = list(cws._ready.values())
+    min_order = [t.task_id for t in cws.arbiter.order(
+        ready, cws._arbiter_context(ctx))]
+    assert "w" in cws._order_cache
+    cws.set_workflow_strategy("w", "rank_max_rr")
+    assert "w" not in cws._order_cache
+    max_order = [t.task_id for t in cws.arbiter.order(
+        ready, cws._arbiter_context(ctx))]
+    assert max_order != min_order           # large inputs first now
+    assert max_order == [t.task_id for t in cws.workflow_strategies["w"]
+                         .prioritize(ready, ctx)]
+
+
+def test_order_cache_survives_cross_workflow_task_id_collision():
+    """_ready is keyed by task id; two workflows sharing an id must not
+    leave the evicted holder's cached order valid."""
+    cws = CommonWorkflowScheduler(adapter=_NullAdapter(),
+                                  strategy="rank_min_rr")
+    for w in ("a", "b"):
+        dag = WorkflowDAG(w)
+        dag.add_task(TaskSpec(task_id="shared", name="p",
+                              resources=Resources(cpus=1.0, mem_bytes=GiB)))
+        cws.submit_workflow(dag, now=0.0)
+    assert list(cws._ready) == ["shared"]
+    # b's submission evicted a's task from _ready: a's membership version
+    # must have moved so any cached order for "a" is invalidated
+    assert cws._bucket_version["a"] > 1
+    ctx = cws._context(1.0)
+    ready = list(cws._ready.values())
+    order = cws.arbiter.order(ready, cws._arbiter_context(ctx))
+    assert [t.spec.workflow_id for t in order] == ["b"]
+
+
+def test_finishing_a_colliding_task_does_not_unqueue_the_other_tenant():
+    """Discard side of the collision: workflow a's task 'shared' finishes
+    while workflow b's READY task holds the same id in _ready — b's task
+    must stay queued (and its cached order valid)."""
+    cws = CommonWorkflowScheduler(adapter=_NullAdapter(),
+                                  strategy="rank_min_rr")
+    cws.add_node(NodeInfo("n0", cpus=1, mem_bytes=2 * GiB), now=0.0)
+    dag_a = WorkflowDAG("a")
+    dag_a.add_task(TaskSpec(task_id="shared", name="p",
+                            resources=Resources(cpus=1.0, mem_bytes=GiB)))
+    cws.submit_workflow(dag_a, now=0.0)          # launches: node is full
+    assert "shared" in cws.allocations
+    dag_b = WorkflowDAG("b")
+    dag_b.add_task(TaskSpec(task_id="shared", name="p",
+                            resources=Resources(cpus=1.0, mem_bytes=GiB)))
+    cws.submit_workflow(dag_b, now=1.0)          # queued: no capacity
+    assert cws._ready["shared"].spec.workflow_id == "b"
+    cws.on_task_finished("shared", 2.0, TaskResult(True))
+    # a's completion must not pop b's same-id READY task
+    assert "shared" in cws._ready
+    assert cws._ready["shared"].spec.workflow_id == "b"
+    assert dag_a.succeeded() and not dag_b.finished()
+    cws.schedule_pending(2.0)                    # freed slot → b launches
+    assert dag_b.task("shared").state == TaskState.SCHEDULED
+
+
+# ---------------------------------------------------------------------------
+# launch ids: the engine itself rejects reports from dead launches
+# ---------------------------------------------------------------------------
+def test_late_success_from_dead_launch_is_rejected():
+    """ROADMAP "known protocol limitation": without launch ids, a late
+    success from a node-lost launch would settle the task and release the
+    *live* relaunch's allocation. With ids the engine drops it."""
+    cws = CommonWorkflowScheduler(adapter=_NullAdapter(),
+                                  strategy="rank_min_rr")
+    cws.add_node(NodeInfo("n0", cpus=4, mem_bytes=8 * GiB), now=0.0)
+    cws.add_node(NodeInfo("n1", cpus=4, mem_bytes=8 * GiB), now=0.0)
+    dag = WorkflowDAG("w")
+    dag.add_task(TaskSpec(task_id="w.t0", name="p",
+                          resources=Resources(cpus=4.0, mem_bytes=GiB)))
+    cws.submit_workflow(dag, now=0.0)
+    task = dag.task("w.t0")
+    first_launch = task.launch_id
+    first_node = cws.allocations["w.t0"].node
+    cws.on_task_started("w.t0", 1.0, launch_id=first_launch)
+    # the node dies; the task is requeued — the dead launch's id is
+    # already burned, so its late success is rejected even BEFORE the
+    # relaunch round (the requeue→relaunch window)
+    cws.remove_node(first_node, now=2.0)
+    assert task.state == TaskState.READY
+    assert task.launch_id != first_launch
+    cws.on_task_finished("w.t0", 2.2, TaskResult(True),
+                         launch_id=first_launch)
+    assert task.state == TaskState.READY and "w.t0" in cws._ready
+    cws.schedule_pending(2.0)
+    assert task.state == TaskState.SCHEDULED
+    assert task.launch_id != first_launch
+    live_node = cws.allocations["w.t0"].node
+    assert live_node != first_node
+    # late reports from the dead launch: both must be ignored outright
+    cws.on_task_started("w.t0", 2.5, launch_id=first_launch)
+    cws.on_task_finished("w.t0", 3.0, TaskResult(True),
+                         launch_id=first_launch)
+    assert task.state == TaskState.SCHEDULED       # not settled
+    assert cws.allocations["w.t0"].node == live_node   # not released
+    # the live launch completes normally
+    cws.on_task_started("w.t0", 3.5, launch_id=task.launch_id)
+    cws.on_task_finished("w.t0", 4.0, TaskResult(True),
+                         launch_id=task.launch_id)
+    assert dag.succeeded()
+    assert cws.allocations == {}
+
+
+def test_simulator_and_executor_report_launch_ids():
+    """End-to-end through the simulator: every start/finish carries the
+    launch id of the launch that produced it (node churn included)."""
+    dag = build_workflow("chipseq", seed=1, n_samples=3)
+    sim = ClusterSimulator(heterogeneous_cluster(3), SimConfig(seed=1))
+    cws = CommonWorkflowScheduler(adapter=sim, strategy="rank_min_rr")
+    sim.attach(cws)
+    sim.submit_workflow_at(0.0, dag)
+    sim.fail_node_at(40.0, "node-01")
+    sim.run()
+    assert dag.succeeded()
+    assert all(t.launch_id > 0 for t in dag.tasks.values())
+
+
+# ---------------------------------------------------------------------------
+# O(1) finished()
+# ---------------------------------------------------------------------------
+def test_finished_counter_matches_full_scan():
+    dag = build_workflow("viralrecon", seed=2, n_samples=3)
+    sim = ClusterSimulator(heterogeneous_cluster(3), SimConfig(seed=2))
+    cws = CommonWorkflowScheduler(adapter=sim, strategy="rank_min_rr")
+    sim.attach(cws)
+    sim.submit_workflow_at(0.0, dag)
+    sim.run()
+    assert dag.finished() == all(t.state.terminal
+                                 for t in dag.tasks.values())
+    assert dag.finished()
+
+
+def test_finished_counter_counts_permanent_failures():
+    cws = CommonWorkflowScheduler(adapter=_NullAdapter(),
+                                  strategy="rank_min_rr")
+    cws.add_node(NodeInfo("n0", cpus=4, mem_bytes=8 * GiB), now=0.0)
+    done = []
+    cws.on_workflow_done = done.append
+    dag = WorkflowDAG("w")
+    dag.add_task(TaskSpec(task_id="w.t0", name="p", max_retries=0,
+                          resources=Resources(cpus=1.0, mem_bytes=GiB)))
+    cws.submit_workflow(dag, now=0.0)
+    assert not dag.finished()
+    cws.on_task_finished("w.t0", 1.0, TaskResult(False, reason="boom"))
+    assert dag.task("w.t0").state == TaskState.ERROR
+    assert dag.finished() and not dag.succeeded()
+    assert done == ["w"]
+
+
+# ---------------------------------------------------------------------------
+# HEFT memo eviction
+# ---------------------------------------------------------------------------
+def test_heft_memo_evicted_on_completion_and_replacement():
+    strat = HEFTStrategy()
+    cws = CommonWorkflowScheduler(adapter=_NullAdapter(), strategy=strat,
+                                  predictor=LotaruPredictor())
+    cws.add_node(NodeInfo("n0", cpus=8, mem_bytes=16 * GiB), now=0.0)
+    dag = WorkflowDAG("w")
+    for i in range(3):
+        dag.add_task(TaskSpec(task_id=f"w.t{i}", name="p",
+                              resources=Resources(cpus=1.0, mem_bytes=GiB)))
+    cws.submit_workflow(dag, now=0.0)
+    assert "w" in strat._memo            # populated by the submit round
+    for i in range(3):
+        cws.on_task_finished(f"w.t{i}", 1.0 + i, TaskResult(True))
+    assert dag.finished()
+    assert "w" not in strat._memo        # evicted with the workflow
+    # an idle replacement also evicts (the old DAG's ranks are dead)
+    dag2 = WorkflowDAG("w")
+    dag2.add_task(TaskSpec(task_id="w.new", name="p",
+                           resources=Resources(cpus=1.0, mem_bytes=GiB)))
+    cws.submit_workflow(dag2, now=10.0)
+    memo_entry = strat._memo.get("w")
+    assert memo_entry is None or "w.new" in memo_entry[1]
+
+
+# ---------------------------------------------------------------------------
+# CWSI: batched submits + /stats endpoint
+# ---------------------------------------------------------------------------
+def test_cwsi_task_submits_coalesce_into_one_round():
+    sim = ClusterSimulator([cpu_node("n0"), cpu_node("n1")],
+                           SimConfig(seed=0))
+    cws = CommonWorkflowScheduler(adapter=sim, strategy="rank_min_rr")
+    sim.attach(cws)
+    server = CWSIServer(cws)
+    client = CWSIClient(server)
+    client.register_workflow("wf", "batch")
+    rounds_before = cws.sched_rounds
+    for i in range(8):
+        client.submit_task("wf", TaskSpec(
+            task_id=f"wf.t{i}", name="p",
+            resources=Resources(cpus=1.0, mem_bytes=GiB),
+            params={"sim": {"runtime": 2.0}}))
+    # the whole batch deferred: no rounds ran, the engine is pending
+    assert cws.sched_rounds == rounds_before
+    assert cws._sched_pending
+    server.clock = 1.0                   # clock advance closes the batch
+    assert cws.sched_rounds == rounds_before + 1
+    assert len(cws.allocations) > 0
+    sim.run()
+    assert cws.workflow_done("wf")
+
+
+def test_cwsi_stats_endpoint_reports_op_counters():
+    sim = ClusterSimulator([cpu_node("n0")], SimConfig(seed=0))
+    cws = CommonWorkflowScheduler(adapter=sim, strategy="rank_min_rr")
+    sim.attach(cws)
+    server = CWSIServer(cws)
+    client = CWSIClient(server)
+    body = client._call("GET", "/stats")
+    assert {"opCounts", "schedulePending", "running", "ready"} <= set(body)
+    assert {"rounds", "sched_round_events", "usage_delta_ops",
+            "view_patches", "priority_cache_hits"} <= set(body["opCounts"])

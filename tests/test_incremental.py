@@ -334,6 +334,9 @@ def test_duplicate_finish_report_is_ignored():
     assert dag.task("w.a").state == TaskState.SUCCEEDED
     assert dag.task("w.a").attempt == 0
     cws.on_task_finished("w.b", now=3.0, result=TaskResult(True))
+    # completions coalesce: the deferred round (which promotes w.c) runs
+    # when the driver drains the timestamp
+    cws.schedule_pending(now=3.0)
     assert dag.task("w.c").state in (TaskState.READY, TaskState.SCHEDULED)
     cws.on_task_finished("w.c", now=4.0, result=TaskResult(True))
     assert dag.succeeded()
