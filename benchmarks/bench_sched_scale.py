@@ -34,6 +34,18 @@ arbiter accounting, patch-based views). Asserted: per-task start/end
 times bit-identical, and ≥10× fewer scheduling rounds, usage-recount ops,
 and node-view snapshots.
 
+The **node-scale sweep** pins the indexed-placement claim: the same
+multi-tenant burst workload on clusters of 50 / 500 / 2,000 nodes (the
+resource-manager scale the CWSI paper positions the scheduler at), run
+once against the node-capacity index (O(log N) placement, lazy views)
+and once with ``legacy_scan=True`` (O(N)-per-launch snapshot + walk).
+Asserted: per-task (task, node, start-time) traces bit-identical at
+every cluster size, and at the largest size ≥10× fewer ``node_fit_ops``
+and ≥5× faster ``schedule()`` rounds. The sweep records the new
+``node_fit_ops`` / ``index_updates`` / ``view_materializations``
+counters per size; CI re-asserts the bit-identical-trace flag straight
+from the archived JSON.
+
 ``BENCH_SMOKE=1`` shrinks every sweep to a CI-sized smoke (~seconds);
 results are also written to ``BENCH_sched_scale.json`` (override the
 path with ``BENCH_JSON``) so CI can archive the perf trajectory.
@@ -51,6 +63,7 @@ from repro.cluster import (
     SimConfig,
     build_workflow,
     heterogeneous_cluster,
+    uniform_cluster,
 )
 from repro.cluster.nodes import cpu_node
 from repro.core import (
@@ -88,6 +101,16 @@ BURST_STAGES = 3 if SMOKE else 6
 BURST_NODES = 3 if SMOKE else 16    # 4-cpu nodes: slots << tenants*width
 BURST_FLOOR = 2.0 if SMOKE else 10.0
 GiB = 1 << 30
+
+# node-scale sweep: one fixed workload across growing cluster sizes (the
+# smoke keeps the reduced 500-node point so CI still exercises the index
+# at a scale where the linear walk visibly hurts)
+SCALE_NODES = [50, 500] if SMOKE else [50, 500, 2000]
+SCALE_TENANTS = 4 if SMOKE else 6
+SCALE_WIDTH = 16 if SMOKE else 40
+SCALE_STAGES = 3 if SMOKE else 4
+SCALE_FIT_FLOOR = 5.0 if SMOKE else 10.0
+SCALE_WALL_FLOOR = 2.0 if SMOKE else 5.0
 
 
 def _sweep(strategy: str, legacy: bool, n_workflows: int,
@@ -389,6 +412,126 @@ def _coalesced_burst(verbose: bool) -> Tuple[Dict[str, float],
     return metrics, sweeps
 
 
+def _scale_run(n_nodes: int, legacy: bool,
+               strategy: str = "rank_min_rr") -> Dict[str, Any]:
+    """One node-scale point: the fixed burst workload on ``n_nodes``."""
+    sim = ClusterSimulator(uniform_cluster(n_nodes), SimConfig(seed=21))
+    cws = CommonWorkflowScheduler(adapter=sim, strategy=strategy,
+                                  legacy_scan=legacy)
+    sim.attach(cws)
+
+    sched_time = [0.0]
+    inner = cws.schedule
+
+    def timed_schedule(now: float) -> int:
+        t0 = time.perf_counter()
+        n = inner(now)
+        sched_time[0] += time.perf_counter() - t0
+        return n
+
+    cws.schedule = timed_schedule
+    dags = []
+    for i in range(SCALE_TENANTS):
+        dag = _burst_workflow(f"wf-{i}", SCALE_WIDTH, SCALE_STAGES)
+        dags.append(dag)
+        sim.submit_workflow_at(0.0, dag)
+    t0 = time.perf_counter()
+    sim.run()
+    wall = time.perf_counter() - t0
+    assert all(d.succeeded() for d in dags)
+    counts = cws.op_counts()
+    # full placement identity: (task, node, start) — node included, since
+    # the index must reproduce the linear walk's picks bit for bit
+    trace = sorted((t.task_id, t.node, round(t.start_time, 9))
+                   for d in dags for t in d.tasks.values())
+    return {
+        "trace": trace,
+        "nodes": n_nodes,
+        "tasks": sum(len(d) for d in dags),
+        "launches": sim.launches,
+        "rounds": counts["rounds"],
+        "node_fit_ops": counts["node_fit_ops"],
+        "index_updates": counts["index_updates"],
+        "view_materializations": counts["view_materializations"],
+        "sched_s": sched_time[0],
+        "us_per_round": 1e6 * sched_time[0] / max(counts["rounds"], 1),
+        "wall_s": wall,
+    }
+
+
+def _node_scale(verbose: bool) -> Tuple[Dict[str, float], Dict[str, Any]]:
+    """Legacy O(N)-walk vs indexed O(log N) placement across cluster sizes."""
+    sweeps: Dict[str, Any] = {}
+    fit_ratio = wall_ratio = 0.0
+    identical = True
+    for n in SCALE_NODES:
+        old = _scale_run(n, legacy=True)
+        new = _scale_run(n, legacy=False)
+        same = old["trace"] == new["trace"]
+        identical = identical and same
+        fit_ratio = old["node_fit_ops"] / max(new["node_fit_ops"], 1)
+        wall_ratio = old["us_per_round"] / max(new["us_per_round"], 1e-9)
+        if verbose:
+            print(f"  node-scale {n:>5} nodes: {old['tasks']} tasks, "
+                  f"{new['rounds']} rounds")
+            print(f"    fit ops   legacy {old['node_fit_ops']:>12,}  "
+                  f"indexed {new['node_fit_ops']:>10,}  "
+                  f"({fit_ratio:.1f}x fewer; "
+                  f"{new['index_updates']:,} index updates)")
+            print(f"    views     legacy {old['view_materializations']:>12,}  "
+                  f"indexed {new['view_materializations']:>10,}")
+            print(f"    us/round  legacy {old['us_per_round']:>12,.0f}  "
+                  f"indexed {new['us_per_round']:>10,.0f}  "
+                  f"({wall_ratio:.1f}x faster)")
+            print(f"    traces identical: {same}")
+        assert same, (
+            f"node-capacity index changed placement decisions at {n} nodes")
+        sweeps[str(n)] = {
+            "legacy": {k: v for k, v in old.items() if k != "trace"},
+            "indexed": {k: v for k, v in new.items() if k != "trace"},
+        }
+    # the tentpole claim, at the largest swept cluster
+    assert fit_ratio >= SCALE_FIT_FLOOR, (
+        f"node-fit-op reduction only {fit_ratio:.1f}x at {SCALE_NODES[-1]} "
+        f"nodes")
+    assert wall_ratio >= SCALE_WALL_FLOOR, (
+        f"round speedup only {wall_ratio:.1f}x at {SCALE_NODES[-1]} nodes")
+    # keep the order-list cost model honest: a pack-style key (bestfit —
+    # the worst case for the first-fit walk, tightest nodes first) at the
+    # most *loaded* swept size. Only decision identity and
+    # no-worse-than-oracle are asserted; the recorded ops show the walk
+    # depth.
+    n_pack = SCALE_NODES[0]
+    pack_old = _scale_run(n_pack, legacy=True, strategy="bestfit")
+    pack_new = _scale_run(n_pack, legacy=False, strategy="bestfit")
+    pack_ratio = pack_old["node_fit_ops"] / max(pack_new["node_fit_ops"], 1)
+    if verbose:
+        print(f"  node-scale {n_pack:>5} nodes (bestfit pack order): "
+              f"fit ops legacy {pack_old['node_fit_ops']:,} "
+              f"indexed {pack_new['node_fit_ops']:,} "
+              f"({pack_ratio:.1f}x fewer); traces identical: "
+              f"{pack_old['trace'] == pack_new['trace']}")
+    assert pack_old["trace"] == pack_new["trace"], (
+        "indexed bestfit diverged from its oracle")
+    assert pack_ratio >= 1.0, (
+        f"indexed pack walk costlier than the oracle scan "
+        f"({pack_ratio:.2f}x)")
+    identical = identical and pack_old["trace"] == pack_new["trace"]
+    sweeps[f"bestfit_{n_pack}"] = {
+        "legacy": {k: v for k, v in pack_old.items() if k != "trace"},
+        "indexed": {k: v for k, v in pack_new.items() if k != "trace"},
+    }
+    metrics = {
+        "scale_bestfit_fit_op_reduction_x": pack_ratio,
+        "scale_nodes_max": float(SCALE_NODES[-1]),
+        "scale_fit_op_reduction_x": fit_ratio,
+        "scale_round_speedup_x": wall_ratio,
+        # CI re-asserts this flag straight from the archived JSON
+        "scale_traces_identical": 1.0 if identical else 0.0,
+    }
+    return metrics, sweeps
+
+
 def _write_json(out: Dict[str, float], sweeps: Dict[str, Any],
                 elapsed_s: float) -> Path:
     """Machine-readable results next to the repo root (CI archives this
@@ -426,6 +569,8 @@ def run(verbose: bool = True) -> Tuple[float, Dict[str, float]]:
         out.update(tenant_out)
         burst_out, sweeps["coalesced_burst"] = _coalesced_burst(verbose)
         out.update(burst_out)
+        scale_out, sweeps["node_scale"] = _node_scale(verbose)
+        out.update(scale_out)
         # the tentpole claim: >=5x fewer rank/readiness computations at
         # scale (the CI smoke runs far below the scale the claim is about
         # — only sanity-check the direction there)

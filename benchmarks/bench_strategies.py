@@ -32,11 +32,17 @@ def _run_strategy(strategy: str, seed: int = 0) -> Tuple[float, float]:
         mem_predictor=FeedbackMemoryPredictor())
     sim.attach(cws)
     # three workflows arrive staggered (multi-tenancy; fair-share matters)
+    dags = []
     for i, wf in enumerate(WORKFLOWS):
-        sim.submit_workflow_at(60.0 * i, build_workflow(wf, seed=seed + i))
+        dag = build_workflow(wf, seed=seed + i)
+        dags.append(dag)
+        sim.submit_workflow_at(60.0 * i, dag)
     sim.run()
-    makespans = [cws.provenance.makespan(d) for d in cws.dags]
-    queue = sum(cws.provenance.total_queue_time(d) for d in cws.dags)
+    # finished workflows retire out of cws.dags — read ids from our own
+    # submission list, provenance keeps the full history
+    wids = [d.workflow_id for d in dags]
+    makespans = [cws.provenance.makespan(w) for w in wids]
+    queue = sum(cws.provenance.total_queue_time(w) for w in wids)
     return float(np.mean(makespans)), queue
 
 

@@ -9,6 +9,7 @@ from .nodes import (  # noqa: F401
     heterogeneous_cluster,
     tpu_fleet,
     tpu_slice,
+    uniform_cluster,
 )
 from .simulator import (  # noqa: F401
     ClusterSimulator,

@@ -48,6 +48,17 @@ def tpu_slice(name: str, chips: int = 256, speed_factor: float = 1.0,
     )
 
 
+def uniform_cluster(n_nodes: int, cpus: float = 4.0, mem_gib: int = 32,
+                    prefix: str = "s") -> List[NodeInfo]:
+    """A homogeneous N-node cluster (zero-padded names so the round-robin
+    ring's name sort equals the registration order). Used by the
+    node-scale placement sweep and the index oracle tests, where N runs
+    to thousands."""
+    width = max(len(str(max(n_nodes - 1, 0))), 2)
+    return [cpu_node(f"{prefix}{i:0{width}d}", cpus, mem_gib)
+            for i in range(n_nodes)]
+
+
 def heterogeneous_cluster(n_nodes: int = 6, cpus: float = 8.0,
                           mem_gib: int = 32,
                           speed_spread: float = 0.3) -> List[NodeInfo]:

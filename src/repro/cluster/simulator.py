@@ -240,8 +240,15 @@ class ClusterSimulator:
                 cws.submit_workflow(ev.payload["dag"], self.now)
 
             elif ev.kind == "SPEC_CHECK":
-                cws.check_speculation(self.now)
-                cws.request_schedule(self.now)
+                # only a round that can change anything: a speculative
+                # launch consumed resources (capacity/ready changes from
+                # other events already request their own rounds — an
+                # unconditional request here ran one empty round per
+                # wakeup for the whole run)
+                if cws.check_speculation(self.now):
+                    cws.request_schedule(self.now)
+                # finished workflows retire out of cws.dags, so this
+                # re-arm scan is over live work only, not history
                 if any(not d.finished() for d in cws.dags.values()):
                     self._push(self.now + self.config.speculation_period,
                                "SPEC_CHECK", {})

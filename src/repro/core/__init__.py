@@ -22,6 +22,7 @@ from .arbiter import (  # noqa: F401
     make_arbiter,
 )
 from .cwsi import CWSI_VERSION, CWSIClient, CWSIError, CWSIServer  # noqa: F401
+from .node_index import NodeCapacityIndex, NodeCaps  # noqa: F401
 from .predict import (  # noqa: F401
     FeedbackMemoryPredictor,
     LotaruPredictor,
@@ -34,11 +35,13 @@ from .scheduler import (  # noqa: F401
     ClusterAdapter,
     CommonWorkflowScheduler,
     NodeInfo,
+    RetiredWorkflow,
     TaskResult,
 )
 from .strategies import (  # noqa: F401
     STRATEGIES,
     NodeView,
+    PlacementKey,
     SchedulingContext,
     Strategy,
     make_strategy,

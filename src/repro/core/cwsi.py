@@ -18,6 +18,7 @@ touching either side. The verb surface follows Lehmann et al. (CCGrid'23):
   GET  /{version}/workflow/{wid}/state                 all task states
   PUT  /{version}/workflow/{wid}/strategy              choose strategy
   PUT  /{version}/workflow/{wid}/share                 set fair-share weight
+  POST /{version}/schedule                             scheduling barrier
   GET  /{version}/arbiter                              arbitration status
   PUT  /{version}/arbiter                              choose arbiter policy
   GET  /{version}/stats                                op-counter snapshot
@@ -34,6 +35,19 @@ round executes once when the resource manager advances ``CWSIServer.clock``
 past the batch's timestamp (or when its event loop drains, e.g.
 ``ClusterSimulator.run``). An engine built with ``sync_schedule=True``
 keeps the historical round-per-submit cadence.
+
+A resource manager *without* a clock (no virtual time to advance, no
+event loop of its own) closes the batch explicitly: ``POST /schedule``
+is the barrier — it drains every pending submit into one coalesced
+round, runs it immediately, and returns the number of launches issued.
+``GET /stats`` reports ``barrierRounds``, the count of rounds triggered
+this way.
+
+Finished workflows are *evicted* from the engine (bounded tombstones,
+see ``scheduler.RetiredWorkflow``): state queries for a recently
+finished workflow still answer from the tombstone (the response carries
+``"retired": true``), late/duplicate completion reports are ignored,
+and a tombstone that has aged out answers 404 like any unknown id.
 
 Arbitration
 -----------
@@ -98,6 +112,9 @@ class CWSIServer:
     def __init__(self, scheduler: CommonWorkflowScheduler) -> None:
         self.scheduler = scheduler
         self._clock: float = 0.0
+        # scheduling rounds triggered by the POST /schedule barrier (the
+        # batch-close path for resource managers without a clock)
+        self.barrier_rounds = 0
 
     @property
     def clock(self) -> float:
@@ -176,12 +193,32 @@ class CWSIServer:
 
         if (method == "GET" and len(parts) == 3
                 and parts[0] == "workflow" and parts[2] == "state"):
-            dag = self.scheduler.dags[parts[1]]
+            dag = self.scheduler.dags.get(parts[1])
+            if dag is not None:
+                return 200, {
+                    "finished": dag.finished(),
+                    "succeeded": dag.succeeded(),
+                    "tasks": {tid: t.state.value
+                              for tid, t in dag.tasks.items()},
+                }
+            retired = self.scheduler.retired_workflow(parts[1])
+            if retired is None:
+                raise KeyError(parts[1])
+            # evicted-but-remembered: answer from the bounded tombstone
             return 200, {
-                "finished": dag.finished(),
-                "succeeded": dag.succeeded(),
-                "tasks": {tid: t.state.value for tid, t in dag.tasks.items()},
+                "finished": True,
+                "succeeded": retired.succeeded,
+                "tasks": dict(retired.task_states),
+                "retired": True,
             }
+
+        if method == "POST" and parts == ["schedule"]:
+            # explicit scheduling barrier for RMs without a clock: close
+            # the current submit batch and run ONE coalesced round now
+            launched = self.scheduler.schedule(self.clock)
+            self.barrier_rounds += 1
+            return 200, {"launched": launched,
+                         "barrierRounds": self.barrier_rounds}
 
         if (method == "PUT" and len(parts) == 3
                 and parts[0] == "workflow" and parts[2] == "strategy"):
@@ -220,6 +257,9 @@ class CWSIServer:
                 "schedulePending": stats["schedule_pending"],
                 "running": stats["running"],
                 "ready": stats["ready"],
+                "retired": stats["retired"],
+                "indexedNodes": stats["indexed_nodes"],
+                "barrierRounds": self.barrier_rounds,
             }
 
         if (method == "GET" and len(parts) == 3
@@ -307,6 +347,11 @@ class CWSIClient:
     def set_share(self, workflow_id: str, share: float) -> float:
         return self._call("PUT", f"/workflow/{workflow_id}/share",
                           {"share": share})["share"]
+
+    def schedule_barrier(self) -> int:
+        """Close the submit batch: run one coalesced scheduling round now
+        (for resource managers that never advance the server clock)."""
+        return self._call("POST", "/schedule")["launched"]
 
     def set_arbiter(self, arbiter: str) -> str:
         return self._call("PUT", "/arbiter", {"arbiter": arbiter})["arbiter"]

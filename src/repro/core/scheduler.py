@@ -16,10 +16,16 @@ The event→decision path is amortized constant time: events mark the
 scheduler pending (``request_schedule``) and the driver coalesces every
 same-timestamp event into one round (``schedule_pending``); arbiter
 accounting (cluster totals, per-workflow dominant-resource usage) is
-maintained as launch/release deltas; node views are patched per launch
-instead of re-snapshotted; and ``dag.finished()`` is a counter, not a
-scan. ``sync_schedule=True`` restores the round-per-event cadence and
-``legacy_scan=True`` the per-round rescan cost model, for baselines.
+maintained as launch/release deltas; and ``dag.finished()`` is a
+counter, not a scan. The *placement* path is sublinear in cluster size:
+a node-capacity index (``node_index.py``) answers the feasibility
+watermark, the per-round memory cap, and every ``place_key``-declaring
+strategy's placement in O(log N), node views are materialised lazily
+(only for oracle placements) and patched per launch, and finished
+workflows retire to bounded tombstones so memory tracks live work.
+``sync_schedule=True`` restores the round-per-event cadence and
+``legacy_scan=True`` the per-round rescan + full-scan-placement cost
+model, for baselines.
 The incremental *cost model* never changes decisions (usage floats,
 cached orders, and patched views are bit-identical — pinned by
 tests/golden and the bench). Coalescing itself is decision-identical
@@ -49,10 +55,12 @@ from .arbiter import (
     make_arbiter,
 )
 from .dag import DataRef, Task, TaskSpec, TaskState, WorkflowDAG, fresh_task_id
+from .node_index import NodeCapacityIndex
 from .predict import FeedbackMemoryPredictor, LotaruPredictor, NodeProfile
 from .provenance import NodeEvent, ProvenanceStore, TaskTrace
 from .strategies import (
     NodeView,
+    PlacementKey,
     SchedulingContext,
     Strategy,
     make_strategy,
@@ -127,6 +135,22 @@ class _Allocation:
     workflow_id: str = ""
 
 
+@dataclass
+class RetiredWorkflow:
+    """Bounded tombstone of an evicted finished workflow.
+
+    A long-running CWSI server retires finished DAGs out of ``dags``
+    (memory stays launch-bound, not history-bound) but keeps the final
+    task states around so late state queries over the CWSI still answer;
+    late/duplicate completion reports are simply ignored."""
+
+    workflow_id: str
+    name: str
+    succeeded: bool
+    retired_at: float
+    task_states: Dict[str, str]
+
+
 class CommonWorkflowScheduler:
     """Workflow-aware scheduler engine behind the CWSI."""
 
@@ -145,6 +169,8 @@ class CommonWorkflowScheduler:
         legacy_scan: bool = False,
         sync_schedule: bool = False,
         arbiter: str | Arbiter = "first_appearance",
+        retire_finished: bool = True,
+        retired_max: int = 256,
     ) -> None:
         self.adapter = adapter
         self.strategy: Strategy = (
@@ -246,8 +272,33 @@ class CommonWorkflowScheduler:
         self._infeasible: Dict[Tuple[int, float, int], None] = {}
         self._capacity_version = 0
         self._infeasible_version = 0
-        self.placement_probes = 0      # Strategy.place invocations
+        self.placement_probes = 0      # placement attempts (indexed or oracle)
         self.feasibility_checks = 0    # demand-vs-watermark bucket checks
+        # --- node-capacity index (node_index.py): O(log N) placement ---
+        # Order statistics over the up-nodes, maintained as launch/
+        # release/churn deltas. schedule() resolves the feasibility
+        # watermark, the per-round mem cap, and every strategy that
+        # declares a ``place_key`` against it, materialising a NodeView
+        # only when an oracle (non-indexable) placement needs the full
+        # snapshot. legacy_scan=True disables it entirely, restoring the
+        # pre-index O(N)-per-launch cost model; decisions are identical
+        # either way (golden traces + the node-index oracle suite).
+        self._node_index: Optional[NodeCapacityIndex] = (
+            None if legacy_scan else NodeCapacityIndex())
+        self.node_fit_ops = 0          # per-node fit evaluations (oracle side)
+        self.view_materializations = 0  # NodeView objects built, engine-wide
+        # --- finished-workflow eviction (bounded tombstones) ---
+        # A finished workflow's DAG is retired out of ``dags`` so a
+        # long-running server's memory tracks live work, not history.
+        # Tombstones keep final task states for late CWSI state queries;
+        # late completion reports for evicted workflows are ignored.
+        self.retire_finished = retire_finished
+        self.retired_max = retired_max
+        self._retired: Dict[str, RetiredWorkflow] = {}
+        # op counters of retired DAGs, folded in so op_counts() stays a
+        # whole-history view after eviction
+        self._retired_readiness_ops = 0
+        self._retired_rank_ops = 0
 
     # ------------------------------------------------------------------
     # resource-manager side: infrastructure events
@@ -259,6 +310,8 @@ class CommonWorkflowScheduler:
             mem_free=info.mem_bytes,
             chips_free=info.chips,
         )
+        if self._node_index is not None:
+            self._node_index.add(info.name, self.nodes[info.name])
         self._capacity_version += 1
         self._invalidate_totals()
         self.provenance.record_node_event(NodeEvent(info.name, now, "UP"))
@@ -282,6 +335,8 @@ class CommonWorkflowScheduler:
         if st is None:
             return
         st.up = False
+        if self._node_index is not None:
+            self._node_index.remove(name)
         self._invalidate_totals()
         self.provenance.record_node_event(NodeEvent(name, now, "DOWN"))
         victims = [tid for tid, a in self.allocations.items() if a.node == name]
@@ -311,6 +366,8 @@ class CommonWorkflowScheduler:
     def set_node_speed(self, name: str, speed_factor: float, now: float = 0.0) -> None:
         if name in self.nodes:
             self.nodes[name].info.speed_factor = speed_factor
+            if self._node_index is not None:
+                self._node_index.on_speed_change(name)
             self.provenance.record_node_event(
                 NodeEvent(name, now, "SLOW" if speed_factor < 1.0 else "RECOVERED",
                           {"speed": speed_factor})
@@ -325,6 +382,7 @@ class CommonWorkflowScheduler:
                           meta: Optional[Dict[str, Any]] = None) -> WorkflowDAG:
         if workflow_id in self.dags:
             return self.dags[workflow_id]
+        self._retired.pop(workflow_id, None)   # id reborn: drop tombstone
         dag = WorkflowDAG(workflow_id, name)
         self.dags[workflow_id] = dag
         self.provenance.register_workflow(
@@ -342,6 +400,7 @@ class CommonWorkflowScheduler:
             dag = WorkflowDAG(spec.workflow_id)
         task = dag.add_task(spec, deps)
         if pending:
+            self._retired.pop(spec.workflow_id, None)
             self.dags[spec.workflow_id] = dag
             self.provenance.register_workflow(spec.workflow_id, {"name": ""})
         task.submit_time = now
@@ -368,6 +427,7 @@ class CommonWorkflowScheduler:
             dag.version = max(dag.version, old.version + 1)
             # the old DAG is gone: release strategy/order caches keyed to it
             self._evict_workflow_caches(dag.workflow_id)
+        self._retired.pop(dag.workflow_id, None)
         self.dags[dag.workflow_id] = dag
         self.provenance.register_workflow(dag.workflow_id, {"name": dag.name})
         for t in dag.tasks.values():
@@ -409,7 +469,9 @@ class CommonWorkflowScheduler:
         Weights default to 1.0; zero means best-effort (ordered after all
         positive-share ready work each round, so it only gets capacity the
         positive-share tenants cannot use). May be set before the workflow
-        registers — shares are tenant policy, not DAG state.
+        registers — shares are tenant policy, not DAG state. The share is
+        cleared when the workflow finishes and retires: re-declare it
+        before rerunning the same id.
         """
         if isinstance(share, bool) or not isinstance(share, (int, float)):
             # no coercion: a client sending "2.5" or true has a bug the
@@ -437,14 +499,19 @@ class CommonWorkflowScheduler:
 
     def _cluster_totals(self) -> Dict[str, float]:
         # recomputed only after node join/leave — same iteration order as
-        # the old per-round scan, so the floats are bit-identical
+        # the old per-round scan, so the floats are bit-identical. The
+        # live path reads the node index (whose entry set IS the up-node
+        # set, in registration order); legacy_scan keeps the dict scan.
         if self._totals_cache is None:
-            up = [st.info for st in self.nodes.values() if st.up]
-            self._totals_cache = {
-                "cpus": sum(i.cpus for i in up),
-                "mem": float(sum(i.mem_bytes for i in up)),
-                "chips": float(sum(i.chips for i in up)),
-            }
+            if self._node_index is not None:
+                self._totals_cache = self._node_index.cluster_totals()
+            else:
+                up = [st.info for st in self.nodes.values() if st.up]
+                self._totals_cache = {
+                    "cpus": sum(i.cpus for i in up),
+                    "mem": float(sum(i.mem_bytes for i in up)),
+                    "chips": float(sum(i.chips for i in up)),
+                }
         return self._totals_cache
 
     def _charge_usage(self, task_id: str, wid: str, cpus: float, mem: int,
@@ -645,10 +712,67 @@ class CommonWorkflowScheduler:
             override.on_workflow_done(wid)
 
     def task_state(self, workflow_id: str, task_id: str) -> TaskState:
-        return self.dags[workflow_id].task(task_id).state
+        dag = self.dags.get(workflow_id)
+        if dag is not None:
+            return dag.task(task_id).state
+        retired = self._retired[workflow_id]       # KeyError → unknown wf
+        return TaskState(retired.task_states[task_id])
 
     def workflow_done(self, workflow_id: str) -> bool:
-        return self.dags[workflow_id].finished()
+        dag = self.dags.get(workflow_id)
+        if dag is not None:
+            return dag.finished()
+        if workflow_id in self._retired:
+            return True                            # only finished wfs retire
+        raise KeyError(workflow_id)
+
+    def retired_workflow(self, workflow_id: str) -> Optional[RetiredWorkflow]:
+        """Tombstone of an evicted finished workflow, if still retained."""
+        return self._retired.get(workflow_id)
+
+    def _retire_workflow(self, dag: WorkflowDAG, now: float) -> None:
+        """Evict a finished DAG wholesale (ROADMAP event-path item).
+
+        The DAG leaves ``dags`` (readiness scans, arbiter appearance maps
+        and op-count sums stop iterating history — relative order of the
+        remaining workflows is preserved, so decisions don't move) and a
+        bounded tombstone keeps the final task states for late CWSI
+        queries. Oldest tombstones fall off first.
+
+        Known limit: retirement is driven by task-completion events, so
+        a workflow that was *registered but never given tasks* (client
+        crashed between register and submit) is never retired — its
+        empty DAG is vacuously finished but no completion ever fires.
+        Reaping those needs a registration TTL, not completion events
+        (ROADMAP future work); the leak is one empty DAG per abandoned
+        registration, unchanged from the pre-eviction engine."""
+        if not self.retire_finished:
+            return
+        wid = dag.workflow_id
+        if self.dags.get(wid) is not dag:
+            return
+        del self.dags[wid]
+        self._dirty_dags.pop(wid, None)
+        # per-workflow tenant policy retires with the workflow: keeping
+        # strategy overrides and share weights for every id ever
+        # scheduled would grow with history (the exact leak eviction
+        # exists to close), and a reborn id must start fresh, not
+        # inherit a dead tenant's policy. Re-declare policy over the
+        # CWSI before resubmitting (shares may be set pre-registration).
+        self.workflow_strategies.pop(wid, None)
+        self.workflow_shares.pop(wid, None)
+        self._retired_readiness_ops += dag.readiness_ops
+        self._retired_rank_ops += dag.rank_ops
+        self._retired.pop(wid, None)               # refresh recency on re-run
+        self._retired[wid] = RetiredWorkflow(
+            workflow_id=wid,
+            name=dag.name,
+            succeeded=dag.succeeded(),
+            retired_at=now,
+            task_states={tid: t.state.value for tid, t in dag.tasks.items()},
+        )
+        while len(self._retired) > self.retired_max:
+            del self._retired[next(iter(self._retired))]
 
     # ------------------------------------------------------------------
     # execution callbacks (from the resource manager)
@@ -751,30 +875,40 @@ class CommonWorkflowScheduler:
         self.arbiter_rounds += 1
         ordered = self.arbiter.order(ready, self._arbiter_context(ctx))
         launched = 0
-        # node views only change when a launch consumes resources: the
-        # live path snapshots once and then patches only the launched-on
-        # node's view after each launch; legacy_scan re-snapshots all N
-        # views per launch (the pre-patch cost model)
+        idx = self._node_index         # None under legacy_scan
+        # node views are LAZY: the live path materialises a full snapshot
+        # only when an oracle (non-place_key) placement needs one, then
+        # patches only the launched-on node's view after each launch;
+        # indexed placements never build a view at all. legacy_scan
+        # re-snapshots all N views per launch (the pre-patch cost model).
         views: Optional[List[NodeView]] = None
         view_slot: Dict[str, int] = {}
-        # memory caps at the largest up-node, constant within a round
-        mem_cap = max((st.info.mem_bytes for st in self.nodes.values()
-                       if st.up), default=0)
+        # memory caps at the largest up-node, constant within a round —
+        # O(1) from the index's churn-maintained multiset (the old
+        # per-round max() scan was O(N); a regression test pins the two
+        # equal across node-fail of the max-memory node)
+        if idx is not None:
+            mem_cap = idx.max_mem_total()
+        else:
+            mem_cap = max((st.info.mem_bytes for st in self.nodes.values()
+                           if st.up), default=0)
         # placement feasibility index: infeasible demand buckets persist
         # until capacity can have grown (see __init__); feasible marks are
-        # only valid for the current views snapshot
+        # only valid until the next launch shrinks capacity
         if self._infeasible_version != self._capacity_version:
             self._infeasible.clear()
             self._infeasible_version = self._capacity_version
         feasible: set = set()
         for task in ordered:
-            if views is None:
-                views = [st.view() for st in self.nodes.values() if st.up]
-                view_slot = {v.name: i for i, v in enumerate(views)}
-                self.view_snapshots += len(views)
-                feasible = set()
-            if not views:
-                break
+            if idx is not None:
+                if idx.size() == 0:
+                    break
+            else:
+                if views is None:
+                    views, view_slot = self._snapshot_views()
+                    feasible = set()
+                if not views:
+                    break
             mem_alloc = self._memory_for(task, mem_cap)
             res = task.spec.resources
             if not self.legacy_scan:
@@ -782,40 +916,91 @@ class CommonWorkflowScheduler:
                 if key in self._infeasible:
                     continue
                 if key not in feasible:
+                    # watermark: O(log N) tree descent instead of the old
+                    # any()-scan over all N views
                     self.feasibility_checks += 1
-                    if any(v.fits_demand(res.cpus, mem_alloc, res.chips)
-                           for v in views):
+                    if idx.exists_fit(res.cpus, mem_alloc, res.chips):
                         feasible.add(key)
                     else:
                         self._infeasible[key] = None
                         continue
-            if mem_alloc == res.mem_bytes:
-                probe = task
+            strat = self._strategy_for(task)
+            pkey: Optional[PlacementKey] = (
+                strat.place_key(task, ctx) if idx is not None else None)
+            if pkey is not None:
+                self.placement_probes += 1
+                node = self._indexed_place(pkey, res.cpus, mem_alloc,
+                                           res.chips)
             else:
-                # strategies check fit against the *requested* allocation
-                eff = replace(task.spec, resources=replace(
-                    task.spec.resources, mem_bytes=mem_alloc))
-                probe = Task(spec=eff, state=task.state,
-                             submit_time=task.submit_time)
-            self.placement_probes += 1
-            node = self._strategy_for(task).place(probe, views, ctx)
+                if views is None:
+                    # first oracle placement this round: build the full
+                    # snapshot now (kept patched for later oracle calls)
+                    views, view_slot = self._snapshot_views()
+                if mem_alloc == res.mem_bytes:
+                    probe = task
+                else:
+                    # strategies check fit against the *requested* allocation
+                    eff = replace(task.spec, resources=replace(
+                        task.spec.resources, mem_bytes=mem_alloc))
+                    probe = Task(spec=eff, state=task.state,
+                                 submit_time=task.submit_time)
+                self.placement_probes += 1
+                self.node_fit_ops += len(views)   # oracle walk cost model
+                node = strat.place(probe, views, ctx)
             if node is None:
                 continue
             self._launch(task, node, mem_alloc, now)
             if self.legacy_scan:
                 views = None
             else:
-                # patch only the launched-on node's view — the other N-1
-                # nodes did not change. Feasible marks are tied to the
-                # snapshot they were probed against, so they reset (the
-                # infeasible index persists: capacity only shrank).
-                views[view_slot[node]] = self.nodes[node].view()
-                self.view_patches += 1
+                if views is not None:
+                    # patch only the launched-on node's view — the other
+                    # N-1 nodes did not change (keeps a mid-round oracle
+                    # snapshot coherent with the index's live state)
+                    views[view_slot[node]] = self.nodes[node].view()
+                    self.view_patches += 1
+                    self.view_materializations += 1
+                # feasible marks expire on launch: capacity only shrank
+                # (the infeasible index persists for the same reason)
                 feasible = set()
             launched += 1
         if self.enable_speculation:
             self.check_speculation(now)
         return launched
+
+    def _snapshot_views(self) -> Tuple[List[NodeView], Dict[str, int]]:
+        """Materialise the full up-node view snapshot (oracle placements
+        and the legacy cost model) and charge the view counters."""
+        views = [st.view() for st in self.nodes.values() if st.up]
+        view_slot = {v.name: i for i, v in enumerate(views)}
+        self.view_snapshots += len(views)
+        self.view_materializations += len(views)
+        return views, view_slot
+
+    def _indexed_place(self, pkey: PlacementKey, cpus: float, mem: int,
+                       chips: int) -> Optional[str]:
+        """Resolve a declarative ``PlacementKey`` against the node index
+        (bit-identical to the oracle ``place`` walk it replaces)."""
+        idx = self._node_index
+        if pkey.prefer:
+            # locality candidates: O(#inputs) direct probes, best
+            # preference first, registration order on ties (= the linear
+            # scan's first-max pick among fitting candidates)
+            ranked = []
+            for name, weight in pkey.prefer.items():
+                slot = idx.slot_of(name)
+                if slot is not None:
+                    ranked.append((-weight, slot, name))
+            ranked.sort()
+            for _, _, name in ranked:
+                if idx.fit_node(name, cpus, mem, chips):
+                    return name
+        if pkey.ring is not None:
+            return pkey.ring.pick_indexed(idx, cpus, mem, chips)
+        if pkey.order is not None:
+            return idx.ordered_first_fit(pkey.order, pkey.key_fn,
+                                         pkey.dynamic, cpus, mem, chips)
+        return None
 
     def _memory_for(self, task: Task, cap: Optional[int] = None) -> int:
         req = task.spec.resources.mem_bytes
@@ -830,8 +1015,12 @@ class CommonWorkflowScheduler:
         # retry beyond cluster capacity would sit unschedulable forever
         # (callers inside a round pass the hoisted per-round cap)
         if cap is None:
-            cap = max((st.info.mem_bytes for st in self.nodes.values()
-                       if st.up), default=alloc)
+            if self._node_index is not None:
+                cap = (self._node_index.max_mem_total()
+                       if self._node_index.size() else alloc)
+            else:
+                cap = max((st.info.mem_bytes for st in self.nodes.values()
+                           if st.up), default=alloc)
         elif cap <= 0:
             cap = alloc
         return min(alloc, cap)
@@ -843,6 +1032,8 @@ class CommonWorkflowScheduler:
         st.cpus_free -= cpus
         st.mem_free -= mem_alloc
         st.chips_free -= res.chips
+        if self._node_index is not None:
+            self._node_index.touch(node)
         self.allocations[task.task_id] = _Allocation(
             node, cpus, mem_alloc, res.chips, task.spec.workflow_id)
         self._charge_usage(task.task_id, task.spec.workflow_id,
@@ -868,6 +1059,8 @@ class CommonWorkflowScheduler:
             st.cpus_free = min(st.cpus_free + alloc.cpus, st.info.cpus)
             st.mem_free = min(st.mem_free + alloc.mem, st.info.mem_bytes)
             st.chips_free = min(st.chips_free + alloc.chips, st.info.chips)
+            if self._node_index is not None:
+                self._node_index.touch(alloc.node)   # no-op if node is down
         # capacity grew: previously-infeasible demand buckets may now fit
         self._capacity_version += 1
 
@@ -934,6 +1127,7 @@ class CommonWorkflowScheduler:
             self._evict_workflow_caches(dag.workflow_id)
             if self.on_workflow_done is not None:
                 self.on_workflow_done(dag.workflow_id)
+            self._retire_workflow(dag, now)
 
     def _propagate_locations(self, task: Task) -> None:
         """Children's matching inputs inherit the producing node (for HEFT's
@@ -967,6 +1161,7 @@ class CommonWorkflowScheduler:
                 self._evict_workflow_caches(dag.workflow_id)
                 if self.on_workflow_done is not None:
                     self.on_workflow_done(dag.workflow_id)
+                self._retire_workflow(dag, now)
             return
         task.state = TaskState.READY
         task.node = None
@@ -1005,10 +1200,23 @@ class CommonWorkflowScheduler:
             copy_spec = replace(task.spec, task_id=copy_id)
             copy = Task(spec=copy_spec, state=TaskState.READY,
                         submit_time=now, speculative_of=tid)
-            views = [st.view() for st in self.nodes.values()
-                     if st.up and st.info.name != alloc.node]
             mem_alloc = self.mem_allocated.get(tid, task.spec.resources.mem_bytes)
-            target = next((v.name for v in views if v.fits(copy, mem_alloc)), None)
+            res = copy.spec.resources
+            if self._node_index is not None:
+                # first fitting node in registration order, excluding the
+                # straggler's own node — the indexed twin of the old
+                # filtered-views walk (bit-identical pick)
+                target = self._node_index.first_fit_slot(
+                    res.cpus, mem_alloc, res.chips, skip_name=alloc.node)
+            else:
+                views = [st.view() for st in self.nodes.values()
+                         if st.up and st.info.name != alloc.node]
+                self.view_materializations += len(views)
+                self.node_fit_ops += len(views)   # same cost model as the
+                # oracle placement walk, so legacy-vs-indexed node_fit_ops
+                # ratios stay comparable when speculation is on
+                target = next(
+                    (v.name for v in views if v.fits(copy, mem_alloc)), None)
             if target is None:
                 continue
             self.spec_copies[copy_id] = copy
@@ -1067,6 +1275,9 @@ class CommonWorkflowScheduler:
             "workflows": {w: d.finished() for w, d in self.dags.items()},
             "running": len(self.allocations),
             "ready": len(self._ready),
+            "retired": len(self._retired),
+            "indexed_nodes": (self._node_index.size()
+                              if self._node_index is not None else 0),
             "placement_probes": self.placement_probes,
             "arbiter_rounds": self.arbiter_rounds,
             "sync_schedule": self.sync_schedule,
@@ -1078,8 +1289,10 @@ class CommonWorkflowScheduler:
         return {
             "rounds": self.sched_rounds,
             "sched_round_events": self.sched_round_events,
-            "readiness_ops": sum(d.readiness_ops for d in self.dags.values()),
-            "rank_ops": sum(d.rank_ops for d in self.dags.values()),
+            "readiness_ops": self._retired_readiness_ops + sum(
+                d.readiness_ops for d in self.dags.values()),
+            "rank_ops": self._retired_rank_ops + sum(
+                d.rank_ops for d in self.dags.values()),
             "placement_probes": self.placement_probes,
             "feasibility_checks": self.feasibility_checks,
             "arbiter_rounds": self.arbiter_rounds,
@@ -1087,6 +1300,12 @@ class CommonWorkflowScheduler:
             "usage_scan_ops": self.usage_scan_ops,
             "view_snapshots": self.view_snapshots,
             "view_patches": self.view_patches,
+            "view_materializations": self.view_materializations,
+            "node_fit_ops": self.node_fit_ops + (
+                self._node_index.node_fit_ops
+                if self._node_index is not None else 0),
+            "index_updates": (self._node_index.index_updates
+                              if self._node_index is not None else 0),
             "priority_sorts": self.priority_sorts,
             "priority_cache_hits": self.priority_cache_hits,
         }

@@ -13,15 +13,28 @@ A strategy answers two questions, and only these two:
     (or ``None`` → leave queued)?
 The engine (scheduler.py) owns everything else: state machines, retries,
 resource accounting, speculation.
+
+Both questions have a *declarative* fast path. ``priority_key`` /
+``priority_token`` let the engine cache each workflow's sorted ready
+queue instead of re-sorting per round; ``place_key`` (its placement
+twin) lets the engine resolve placement against the node-capacity index
+(``node_index.py``) in O(log N) instead of scanning all N node views.
+``place(task, views, ctx)`` remains the oracle: custom strategies that
+declare no ``place_key``, strategies whose score is task-dependent
+(warm HEFT's EFT, Tarema's grouping), and ``legacy_scan=True`` engines
+all walk the full snapshot exactly as before — and the indexed path is
+pinned bit-identical to that walk by the golden traces and the
+``tests/test_node_index.py`` oracle suite.
 """
 from __future__ import annotations
 
 import itertools
 from abc import ABC, abstractmethod
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, TYPE_CHECKING
+from typing import Any, Callable, Dict, List, Optional, Sequence, TYPE_CHECKING
 
 from .dag import Task, WorkflowDAG
+from .node_index import fits_demand as _fits_demand
 
 if TYPE_CHECKING:  # pragma: no cover
     from .predict import FeedbackMemoryPredictor, LotaruPredictor
@@ -50,10 +63,12 @@ class NodeView:
         return self.fits_demand(res.cpus, mem, res.chips)
 
     def fits_demand(self, cpus: float, mem: int, chips: int) -> bool:
-        """Raw demand-signature fit (the placement index's watermark test)."""
-        if chips > 0:
-            return self.chips_free >= chips and self.mem_free >= mem
-        return self.cpus_free >= cpus and self.mem_free >= mem
+        """Raw demand-signature fit — delegates to the single shared
+        admission rule (``node_index.fits_demand``), which the capacity
+        index's probes and tree pruning also use, so the oracle and
+        indexed placement paths can never disagree on what "fits"."""
+        return _fits_demand(self.cpus_free, self.mem_free, self.chips_free,
+                            cpus, mem, chips)
 
 
 @dataclass
@@ -71,6 +86,63 @@ class SchedulingContext:
         return self.dags[task.spec.workflow_id]
 
 
+@dataclass
+class PlacementKey:
+    """Declarative placement: how to resolve ``place`` via the node index.
+
+    Returned by ``Strategy.place_key`` (``None`` → the engine falls back
+    to the ``place(task, views, ctx)`` oracle over a full node-view
+    snapshot). Exactly one placement mode applies, tried in order:
+
+    * ``prefer`` — node-name → preference-weight candidates probed first,
+      in (descending weight, registration order); used for data locality,
+      where the candidate set is O(#inputs), not O(N). Falls through to
+      ``ring``/``order`` when no candidate fits.
+    * ``ring`` — the paper's stateful round-robin: the placer walks the
+      index's name-sorted ring from its persistent pointer (O(log N)
+      instead of rebuilding an O(N) name→view map per pick).
+    * ``order`` + ``key_fn`` — score-based placement: the index keeps the
+      up-nodes sorted by ``(key_fn(node), registration slot)`` and returns
+      the first *fitting* entry, which is ``max(fit, key=score)`` of the
+      linear scan including Python's first-on-tie semantics. ``order``
+      names the key's semantics (the structure is shared across strategy
+      instances), so ``key_fn`` must be a module-level pure function of
+      the node's capacity fields; ``dynamic=False`` marks keys that read
+      only static attributes (e.g. speed factor), which skip the
+      per-launch re-seating entirely.
+    """
+
+    order: Optional[str] = None
+    key_fn: Optional[Callable[[Any], tuple]] = None
+    dynamic: bool = True
+    ring: Optional["_RoundRobinPlacer"] = None
+    prefer: Optional[Dict[str, float]] = None
+
+
+# Module-level place keys (shared index structures; smaller = preferred,
+# ties broken by node registration order — the linear scan's first pick).
+def _spread_place_key(n: Any) -> tuple:
+    """LeastAllocated spread: maximise normalised free cpu+mem
+    (OriginalStrategy's kube-like score, negated for min-order)."""
+    return (-(n.cpus_free / max(n.cpus_total, 1e-9)
+              + n.mem_free / max(n.mem_total, 1)),)
+
+
+def _speed_place_key(n: Any) -> tuple:
+    """Fastest node first (HEFT's cold-predictor fallback)."""
+    return (-n.speed_factor,)
+
+
+def _pack_place_key(n: Any) -> tuple:
+    """Best fit: tightest node first (chips, then cpus, then memory)."""
+    return (n.chips_free, n.cpus_free, n.mem_free)
+
+
+def _unpack_place_key(n: Any) -> tuple:
+    """Worst fit: roomiest node first (negated best-fit key)."""
+    return (-n.chips_free, -n.cpus_free, -n.mem_free)
+
+
 class Strategy(ABC):
     name: str = "abstract"
 
@@ -82,6 +154,22 @@ class Strategy(ABC):
     def place(self, task: Task, nodes: List[NodeView],
               ctx: SchedulingContext) -> Optional[str]:
         ...
+
+    # ------------------------------------------------------------------
+    # indexed placement (the engine's node-capacity index)
+    # ------------------------------------------------------------------
+    # A strategy whose place() is "first fitting node in some node order"
+    # may declare that order here; the engine then resolves placement
+    # through the O(log N) node index instead of materialising all N
+    # node views and walking them. ``None`` (the default) means "not
+    # indexable for this task": place() is called with a full snapshot,
+    # preserving the behaviour of task-dependent scorers (warm HEFT,
+    # Tarema) and of any out-of-tree subclass that predates the hook.
+    # The engine may call this per task per round — return prebuilt
+    # specs, not fresh allocations, unless the spec is task-dependent.
+    def place_key(self, task: Task,
+                  ctx: SchedulingContext) -> Optional[PlacementKey]:
+        return None
 
     # hook for strategies that learn from completions (e.g. Tarema labels)
     def on_task_finished(self, task: Task, ctx: SchedulingContext) -> None:
@@ -148,6 +236,35 @@ class _RoundRobinPlacer:
         self._ring: List[str] = []
         self._members: frozenset = frozenset()
         self._ptr = 0
+        # index membership version this placer last resynced at (the
+        # indexed twin of the oracle walk's membership-diff check)
+        self._ring_version = -1
+
+    def pick_indexed(self, index: Any, cpus: float, mem: int,
+                     chips: int) -> Optional[str]:
+        """The pick() walk, resolved against the node-capacity index.
+
+        Same persistent ring and pointer; the first fitting node from
+        the pointer is found by O(log N) tree descent instead of an
+        O(N) name→view dict build plus lazy walk. Resync applies
+        ``ptr %= len`` exactly when the oracle walk would (membership
+        changed since this placer last looked), so decisions stay
+        bit-identical — the oracle-vs-indexed unit test pins this.
+        """
+        names, version = index.ring()
+        if self._ring_version != version:
+            self._ring = list(names)
+            self._members = frozenset(names)
+            self._ptr %= max(len(names), 1)
+            self._ring_version = version
+        n = len(names)
+        if n == 0:
+            return None
+        pos = index.ring_first_fit(self._ptr, cpus, mem, chips)
+        if pos is None:
+            return None
+        self._ptr = (pos + 1) % n
+        return names[pos]
 
     def pick(self, task: Task, nodes: Sequence[NodeView]) -> Optional[str]:
         if len(nodes) != len(self._ring) or any(
@@ -175,6 +292,8 @@ class OriginalStrategy(Strategy):
 
     name = "original"
 
+    _PLACE_KEY = PlacementKey(order="spread", key_fn=_spread_place_key)
+
     def prioritize(self, tasks: List[Task], ctx: SchedulingContext) -> List[Task]:
         return self._prioritize_by_key(tasks, ctx)
 
@@ -184,17 +303,19 @@ class OriginalStrategy(Strategy):
     def priority_key(self, task: Task, ctx: SchedulingContext) -> tuple:
         return (task.ready_time, task.submit_time, task.task_id)
 
+    def place_key(self, task, ctx):
+        return self._PLACE_KEY
+
     def place(self, task: Task, nodes: List[NodeView],
               ctx: SchedulingContext) -> Optional[str]:
         fit = _fitting(task, nodes)
         if not fit:
             return None
-        # "LeastAllocated" spread scoring, as the default kube-scheduler does.
-        return max(
-            fit,
-            key=lambda n: (n.cpus_free / max(n.cpus_total, 1e-9))
-            + (n.mem_free / max(n.mem_total, 1)),
-        ).name
+        # "LeastAllocated" spread scoring, as the default kube-scheduler
+        # does — the SAME key function the index sorts by (min of the
+        # negated score ≡ max of the score, first-on-tie either way), so
+        # the oracle and indexed paths cannot drift apart.
+        return min(fit, key=_spread_place_key).name
 
 
 class FIFORoundRobin(Strategy):
@@ -204,6 +325,7 @@ class FIFORoundRobin(Strategy):
 
     def __init__(self) -> None:
         self._rr = _RoundRobinPlacer()
+        self._place_key = PlacementKey(ring=self._rr)
 
     def prioritize(self, tasks: List[Task], ctx: SchedulingContext) -> List[Task]:
         return self._prioritize_by_key(tasks, ctx)
@@ -213,6 +335,9 @@ class FIFORoundRobin(Strategy):
 
     def priority_key(self, task: Task, ctx: SchedulingContext) -> tuple:
         return (task.ready_time, task.submit_time, task.task_id)
+
+    def place_key(self, task, ctx):
+        return self._place_key
 
     def place(self, task, nodes, ctx):
         return self._rr.pick(task, nodes)
@@ -232,6 +357,7 @@ class RankStrategy(Strategy):
         self.tie = tie
         self.name = f"rank_{tie}_rr"
         self._rr = _RoundRobinPlacer()
+        self._place_key = PlacementKey(ring=self._rr)
 
     def prioritize(self, tasks: List[Task], ctx: SchedulingContext) -> List[Task]:
         return self._prioritize_by_key(tasks, ctx)
@@ -246,6 +372,9 @@ class RankStrategy(Strategy):
         size = task.spec.input_size
         tie = size if self.tie == "min" else -size
         return (-rank, tie, task.ready_time, task.task_id)
+
+    def place_key(self, task, ctx):
+        return self._place_key
 
     def place(self, task, nodes, ctx):
         return self._rr.pick(task, nodes)
@@ -315,13 +444,25 @@ class HEFTStrategy(Strategy):
         rank = self._weighted_ranks(ctx.dag_of(task), ctx)[task.task_id]
         return (-rank, task.ready_time, task.task_id)
 
+    _COLD_PLACE_KEY = PlacementKey(order="speed", key_fn=_speed_place_key,
+                                   dynamic=False)
+
+    def place_key(self, task, ctx):
+        # cold predictor → fastest-node placement is a static node order;
+        # warm EFT scores are task-dependent (staging + drain estimates),
+        # so those placements stay on the full-snapshot oracle
+        if ctx.predictor is None or not ctx.predictor.known(task.name):
+            return self._COLD_PLACE_KEY
+        return None
+
     def place(self, task: Task, nodes: List[NodeView],
               ctx: SchedulingContext) -> Optional[str]:
         fit = _fitting(task, nodes)
         if not fit:
             return None
         if ctx.predictor is None or not ctx.predictor.known(task.name):
-            return max(fit, key=lambda n: n.speed_factor).name
+            # shared key fn with the indexed cold path (see place_key)
+            return min(fit, key=_speed_place_key).name
 
         def eft(n: NodeView) -> float:
             rt, _ = ctx.predictor.predict(task.name, task.spec.input_size, n.name)
@@ -419,6 +560,7 @@ class FairStrategy(Strategy):
 
     def __init__(self) -> None:
         self._rr = _RoundRobinPlacer()
+        self._place_key = PlacementKey(ring=self._rr)
 
     def prioritize(self, tasks: List[Task], ctx: SchedulingContext) -> List[Task]:
         running: Dict[str, int] = {}
@@ -429,8 +571,115 @@ class FairStrategy(Strategy):
             key=lambda t: (running.get(t.spec.workflow_id, 0), t.submit_time, t.task_id),
         )
 
+    def place_key(self, task, ctx):
+        return self._place_key
+
     def place(self, task, nodes, ctx):
         return self._rr.pick(task, nodes)
+
+
+# ---------------------------------------------------------------------------
+# Bin-packing & data-locality placements — the remaining classic RM
+# placement policies, expressed natively as indexed place keys.
+# ---------------------------------------------------------------------------
+class BestFitStrategy(Strategy):
+    """FIFO order; tightest fitting node (classic best-fit packing:
+    consolidate load so big slots stay whole for big tasks)."""
+
+    name = "bestfit"
+
+    _PLACE_KEY = PlacementKey(order="pack", key_fn=_pack_place_key)
+
+    def prioritize(self, tasks: List[Task], ctx: SchedulingContext) -> List[Task]:
+        return self._prioritize_by_key(tasks, ctx)
+
+    def priority_token(self, ctx, dag):
+        return ()
+
+    def priority_key(self, task: Task, ctx: SchedulingContext) -> tuple:
+        return (task.ready_time, task.submit_time, task.task_id)
+
+    def place_key(self, task, ctx):
+        return self._PLACE_KEY
+
+    def place(self, task: Task, nodes: List[NodeView],
+              ctx: SchedulingContext) -> Optional[str]:
+        fit = _fitting(task, nodes)
+        if not fit:
+            return None
+        return min(fit, key=_pack_place_key).name
+
+
+class WorstFitStrategy(Strategy):
+    """FIFO order; roomiest fitting node (worst-fit spread by raw free
+    capacity — OriginalStrategy without the per-node normalisation)."""
+
+    name = "worstfit"
+
+    _PLACE_KEY = PlacementKey(order="unpack", key_fn=_unpack_place_key)
+
+    def prioritize(self, tasks: List[Task], ctx: SchedulingContext) -> List[Task]:
+        return self._prioritize_by_key(tasks, ctx)
+
+    def priority_token(self, ctx, dag):
+        return ()
+
+    def priority_key(self, task: Task, ctx: SchedulingContext) -> tuple:
+        return (task.ready_time, task.submit_time, task.task_id)
+
+    def place_key(self, task, ctx):
+        return self._PLACE_KEY
+
+    def place(self, task: Task, nodes: List[NodeView],
+              ctx: SchedulingContext) -> Optional[str]:
+        fit = _fitting(task, nodes)
+        if not fit:
+            return None
+        return min(fit, key=_unpack_place_key).name
+
+
+class DataLocalityStrategy(Strategy):
+    """Rank-min order; place on the node already holding the most input
+    bytes (skipping staging), spread-fallback when no input-holding node
+    fits. The candidate set is O(#inputs), so the indexed path probes a
+    handful of named nodes instead of scanning the cluster."""
+
+    name = "data_local"
+
+    def prioritize(self, tasks: List[Task], ctx: SchedulingContext) -> List[Task]:
+        return self._prioritize_by_key(tasks, ctx)
+
+    def priority_token(self, ctx, dag):
+        return None if dag is None else (dag.version,)
+
+    def priority_key(self, task: Task, ctx: SchedulingContext) -> tuple:
+        rank = ctx.dag_of(task).ranks()[task.task_id]
+        return (-rank, task.spec.input_size, task.ready_time, task.task_id)
+
+    @staticmethod
+    def _resident_bytes(task: Task) -> Dict[str, float]:
+        resident: Dict[str, float] = {}
+        for r in task.spec.inputs:
+            if r.location is not None and r.size_bytes > 0:
+                resident[r.location] = resident.get(r.location, 0) + r.size_bytes
+        return resident
+
+    def place_key(self, task, ctx):
+        resident = self._resident_bytes(task)
+        return PlacementKey(prefer=resident or None,
+                            order="spread", key_fn=_spread_place_key)
+
+    def place(self, task: Task, nodes: List[NodeView],
+              ctx: SchedulingContext) -> Optional[str]:
+        fit = _fitting(task, nodes)
+        if not fit:
+            return None
+        resident = self._resident_bytes(task)
+        if resident:
+            local = [n for n in fit if n.name in resident]
+            if local:
+                return max(local, key=lambda n: resident[n.name]).name
+        return min(fit, key=_spread_place_key).name   # shared spread key
 
 
 STRATEGIES = {
@@ -441,6 +690,9 @@ STRATEGIES = {
     "heft": HEFTStrategy,
     "tarema": TaremaStrategy,
     "fair": FairStrategy,
+    "bestfit": BestFitStrategy,
+    "worstfit": WorstFitStrategy,
+    "data_local": DataLocalityStrategy,
 }
 
 

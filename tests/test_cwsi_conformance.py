@@ -25,6 +25,7 @@ from repro.core import (
     DataRef,
     LotaruPredictor,
     Resources,
+    TaskResult,
     TaskSpec,
 )
 
@@ -86,6 +87,7 @@ ENDPOINTS = [
     ("GET", "/v1/workflow/{wid}/state", None, 200),
     ("PUT", "/v1/workflow/{wid}/strategy", {"strategy": "fifo_rr"}, 200),
     ("PUT", "/v1/workflow/{wid}/share", {"share": 2.5}, 200),
+    ("POST", "/v1/schedule", None, 200),
     ("GET", "/v1/arbiter", None, 200),
     ("PUT", "/v1/arbiter", {"arbiter": "fair_share"}, 200),
     ("GET", "/v1/stats", None, 200),
@@ -217,6 +219,10 @@ BAD_BODIES = [
     ("GET", "/v1/workflow/missing/state", None, 404),
     ("GET", "/v1/workflow/w0/task/missing/state", None, 404),
     ("GET", "/v1/provenance/workflow/missing", None, 200),    # empty, valid
+    # barrier: a non-object body must 400 WITHOUT running a round
+    ("POST", "/v1/schedule", "go", 400),
+    ("POST", "/v1/schedule", [1, 2], 400),
+    ("POST", "/v1/schedule/extra", None, 404),
 ]
 
 
@@ -283,6 +289,63 @@ def test_stats_endpoint_is_read_only_and_complete(rig):
             "priority_sorts", "priority_cache_hits"} <= set(counts)
     # reading counters must not run rounds or mutate anything
     assert _snapshot(cws) == before
+
+
+def test_schedule_barrier_drains_pending_submits(rig):
+    """POST /schedule is the batch boundary for RMs without a clock: the
+    pending submit batch runs as ONE coalesced round, immediately."""
+    sim, cws, server = rig
+    _req(server, "POST", "/v1/workflow/w0", {"name": "w0"})
+    for i in range(4):
+        out = _req(server, "POST", "/v1/workflow/w0/task",
+                   _task_body(f"w0.t{i}"))
+        assert out["status"] == 200
+    # submits batched: no round has run, nothing is scheduled yet
+    assert cws._sched_pending
+    assert cws.stats()["running"] == 0
+    rounds_before = cws.sched_rounds
+    out = _req(server, "POST", "/v1/schedule")
+    assert out["status"] == 200
+    assert out["body"]["launched"] > 0
+    assert out["body"]["barrierRounds"] == 1
+    assert cws.sched_rounds == rounds_before + 1   # ONE coalesced round
+    assert not cws._sched_pending
+    assert cws.stats()["running"] == out["body"]["launched"]
+    stats = _req(server, "GET", "/v1/stats")["body"]
+    assert stats["barrierRounds"] == 1
+    # errored barrier calls never run rounds (mutate nothing)
+    before = _snapshot(cws)
+    assert _req(server, "POST", "/v1/schedule", "not-an-object")[
+        "status"] == 400
+    assert _snapshot(cws) == before
+    assert _req(server, "GET", "/v1/stats")["body"]["barrierRounds"] == 1
+
+
+def test_retired_workflow_still_answers_state_queries(rig):
+    """Finished workflows evict to bounded tombstones; the CWSI keeps
+    answering state queries for them and ignores late reports."""
+    sim, cws, server = rig
+    _req(server, "POST", "/v1/workflow/wr", {"name": "wr"})
+    _req(server, "POST", "/v1/workflow/wr/task", _task_body("wr.t0"))
+    sim.run()
+    server.clock = sim.now
+    assert "wr" not in cws.dags                   # evicted wholesale
+    out = _req(server, "GET", "/v1/workflow/wr/state")
+    assert out["status"] == 200
+    assert out["body"]["finished"] and out["body"]["succeeded"]
+    assert out["body"]["retired"] is True
+    assert out["body"]["tasks"] == {"wr.t0": "SUCCEEDED"}
+    out = _req(server, "GET", "/v1/workflow/wr/task/wr.t0/state")
+    assert out["status"] == 200 and out["body"]["state"] == "SUCCEEDED"
+    # unknown task of a retired workflow is still a clean 404
+    assert _req(server, "GET",
+                "/v1/workflow/wr/task/ghost/state")["status"] == 404
+    # late duplicate completion report: ignored, state unchanged
+    before = _snapshot(cws)
+    cws.on_task_finished("wr.t0", sim.now + 1.0, TaskResult(True))
+    assert _snapshot(cws) == before
+    # stats surface the tombstone count
+    assert _req(server, "GET", "/v1/stats")["body"]["retired"] >= 1
 
 
 def test_share_and_arbiter_roundtrip(rig):

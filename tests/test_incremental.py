@@ -222,8 +222,11 @@ def test_per_workflow_strategy_only_affects_its_workflow():
     sim.submit_workflow_at(0.0, dag_b)
     sim.run()
     assert dag_a.succeeded() and dag_b.succeeded()
+    # the per-workflow override never mutated the scheduler-wide strategy
     assert cws.strategy.name == "rank_min_rr"
-    assert cws.workflow_strategies["wfB"].name == "original"
+    # ...and retired together with its finished workflow (tenant policy
+    # is per workflow instance; a reborn "wfB" starts fresh)
+    assert "wfB" not in cws.workflow_strategies
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,444 @@
+"""Node-capacity index: indexed placement ≡ linear scan, pinned.
+
+The index (``core/node_index.py``) changes the *cost* of placement —
+O(log N) tree descent and sorted-order walks instead of O(N) view
+snapshots and scans — never its outcome. This suite holds it there:
+
+  * structure oracles: ``first_fit_slot`` / ``ring_first_fit`` /
+    ``ordered_first_fit`` against brute-force walks over random free
+    states, including equal-capacity tie nodes,
+  * the round-robin placer's indexed pick against its oracle walk under
+    interleaved membership churn,
+  * the full-engine property: every strategy × arbiter × node-churn
+    sequence (mid-run fails and joins, duplicate-capacity nodes)
+    schedules bit-identically with ``legacy_scan=True`` and with the
+    index,
+  * the incremental ``mem_cap`` (max up-node memory) across node-fail
+    of the max-memory node — the old per-round O(N) max() scan,
+  * leak checks: index size tracks live up-nodes after churn, and
+    finished-workflow tombstones stay bounded,
+  * finished-workflow eviction: late queries answer from tombstones,
+    late/duplicate completion reports are ignored.
+"""
+import numpy as np
+import pytest
+
+from repro.cluster import (
+    ClusterSimulator,
+    SimConfig,
+    build_workflow,
+    uniform_cluster,
+)
+from repro.cluster.nodes import cpu_node
+from repro.core import (
+    CommonWorkflowScheduler,
+    NodeInfo,
+    Resources,
+    TaskSpec,
+    TaskState,
+    WorkflowDAG,
+)
+from repro.core.node_index import NodeCapacityIndex
+from repro.core.scheduler import TaskResult, _NodeState
+from repro.core.strategies import (
+    STRATEGIES,
+    _RoundRobinPlacer,
+    _spread_place_key,
+)
+from repro.core.dag import Task
+
+GiB = 1 << 30
+
+
+class _NullAdapter:
+    def launch(self, task, node, mem_alloc):
+        pass
+
+    def kill(self, task_id):
+        pass
+
+
+def _state(name, cpus=4.0, mem_gib=16, chips=0, speed=1.0):
+    info = NodeInfo(name, cpus=cpus, mem_bytes=mem_gib * GiB, chips=chips,
+                    speed_factor=speed)
+    return _NodeState(info=info, cpus_free=cpus, mem_free=info.mem_bytes,
+                      chips_free=chips)
+
+
+def _fits(st, cpus, mem, chips):
+    if chips > 0:
+        return st.chips_free >= chips and st.mem_free >= mem
+    return st.cpus_free >= cpus and st.mem_free >= mem
+
+
+# ---------------------------------------------------------------------------
+# structure oracles against brute force
+# ---------------------------------------------------------------------------
+def test_first_fit_matches_insertion_order_scan():
+    rng = np.random.default_rng(0)
+    for trial in range(30):
+        n = int(rng.integers(1, 17))
+        states = []
+        idx = NodeCapacityIndex()
+        for i in range(n):
+            st = _state(f"n{i:02d}", cpus=float(rng.choice([2.0, 4.0, 8.0])),
+                        mem_gib=int(rng.choice([8, 16, 16, 32])))
+            states.append(st)
+            idx.add(st.info.name, st)
+        # random partial occupancy, applied through touch()
+        for st in states:
+            st.cpus_free = float(rng.integers(0, int(st.info.cpus) + 1))
+            st.mem_free = int(rng.integers(0, 3)) * 8 * GiB
+            idx.touch(st.info.name)
+        for _ in range(10):
+            cpus = float(rng.integers(1, 9))
+            mem = int(rng.integers(1, 33)) * GiB
+            want = next((s.info.name for s in states
+                         if _fits(s, cpus, mem, 0)), None)
+            assert idx.first_fit_slot(cpus, mem, 0) == want
+            assert idx.exists_fit(cpus, mem, 0) == (want is not None)
+            # exclusion (the speculation path): first fit skipping a node
+            skip = states[int(rng.integers(0, n))].info.name
+            want_skip = next((s.info.name for s in states
+                              if s.info.name != skip
+                              and _fits(s, cpus, mem, 0)), None)
+            assert idx.first_fit_slot(cpus, mem, 0,
+                                      skip_name=skip) == want_skip
+
+
+def test_ring_first_fit_matches_cyclic_walk():
+    rng = np.random.default_rng(1)
+    for trial in range(20):
+        n = int(rng.integers(1, 13))
+        idx = NodeCapacityIndex()
+        states = []
+        for i in range(n):
+            st = _state(f"m{rng.integers(0, 1000):03d}-{i}")
+            states.append(st)
+            idx.add(st.info.name, st)
+        for st in states:
+            st.cpus_free = float(rng.integers(0, 5))
+            idx.touch(st.info.name)
+        names, _ = idx.ring()
+        by_name = {s.info.name: s for s in states}
+        for _ in range(8):
+            start = int(rng.integers(0, n))
+            cpus = float(rng.integers(1, 5))
+            want = None
+            for i in range(n):
+                pos = (start + i) % n
+                if _fits(by_name[names[pos]], cpus, GiB, 0):
+                    want = pos
+                    break
+            assert idx.ring_first_fit(start, cpus, GiB, 0) == want
+
+
+def test_ordered_first_fit_matches_score_scan_with_ties():
+    """Equal-score nodes must resolve in registration order — the linear
+    scan's ``max(fit, key=score)`` first-on-tie pick."""
+    rng = np.random.default_rng(2)
+    for trial in range(20):
+        idx = NodeCapacityIndex()
+        states = []
+        n = int(rng.integers(2, 12))
+        for i in range(n):
+            # duplicate capacities on purpose: spread scores tie exactly
+            st = _state(f"n{i}", cpus=4.0, mem_gib=16)
+            states.append(st)
+            idx.add(st.info.name, st)
+        for st in states:
+            st.cpus_free = float(rng.choice([1.0, 2.0, 4.0]))
+            st.mem_free = int(rng.choice([4, 8, 16])) * GiB
+            idx.touch(st.info.name)
+        cpus, mem = 1.0, 2 * GiB
+        fit = [s for s in states if _fits(s, cpus, mem, 0)]
+        want = None
+        if fit:
+            best = max(fit, key=lambda s: (
+                s.cpus_free / max(s.info.cpus, 1e-9)
+                + s.mem_free / max(s.info.mem_bytes, 1)))
+            want = best.info.name
+        got = idx.ordered_first_fit("spread", _spread_place_key, True,
+                                    cpus, mem, 0)
+        assert got == want
+
+
+def test_order_id_collision_with_different_key_fn_fails_loudly():
+    idx = NodeCapacityIndex()
+    idx.add("n0", _state("n0"))
+    assert idx.ordered_first_fit("spread", _spread_place_key, True,
+                                 1.0, GiB, 0) == "n0"
+    with pytest.raises(ValueError, match="spread"):
+        idx.ordered_first_fit("spread", lambda c: (c.cpus_free,), True,
+                              1.0, GiB, 0)
+    with pytest.raises(ValueError, match="spread"):
+        idx.ordered_first_fit("spread", _spread_place_key, False,
+                              1.0, GiB, 0)
+
+
+def test_abandoned_dynamic_orders_are_evicted_and_rebuilt_on_reuse():
+    from repro.core.node_index import _ORDER_IDLE_LIMIT
+    idx = NodeCapacityIndex()
+    states = [_state(f"n{i}") for i in range(3)]
+    for st in states:
+        idx.add(st.info.name, st)
+    assert idx.ordered_first_fit("spread", _spread_place_key, True,
+                                 1.0, GiB, 0) is not None
+    assert "order_spread" in idx.sizes()
+    # capacity churns with no further queries: the order is dropped
+    for i in range(_ORDER_IDLE_LIMIT + 1):
+        st = states[i % 3]
+        st.cpus_free = float(i % 4)
+        idx.touch(st.info.name)
+    assert "order_spread" not in idx.sizes()
+    # ...and lazily rebuilt, correct, on the next query
+    for st in states:
+        st.cpus_free = st.info.cpus
+        idx.touch(st.info.name)
+    states[0].cpus_free = 0.0
+    idx.touch("n0")
+    assert idx.ordered_first_fit("spread", _spread_place_key, True,
+                                 1.0, GiB, 0) == "n1"
+
+
+def test_rr_placer_indexed_matches_oracle_under_churn():
+    rng = np.random.default_rng(3)
+    oracle, indexed = _RoundRobinPlacer(), _RoundRobinPlacer()
+    states = {}
+    idx = NodeCapacityIndex()
+
+    def add(name):
+        st = _state(name, cpus=2.0, mem_gib=8)
+        states[name] = st
+        idx.add(name, st)
+
+    for i in range(4):
+        add(f"n{i}")
+    task = Task(spec=TaskSpec(task_id="t", name="p",
+                              resources=Resources(cpus=1.0, mem_bytes=GiB)))
+    spare = 4
+    for step in range(120):
+        op = rng.choice(["pick", "pick", "pick", "occupy", "free",
+                         "join", "leave"])
+        if op == "join":
+            add(f"n{spare}")
+            spare += 1
+        elif op == "leave" and len(states) > 1:
+            name = list(states)[int(rng.integers(0, len(states)))]
+            del states[name]
+            idx.remove(name)
+        elif op == "occupy" and states:
+            st = states[list(states)[int(rng.integers(0, len(states)))]]
+            st.cpus_free = max(st.cpus_free - 1.0, 0.0)
+            idx.touch(st.info.name)
+        elif op == "free" and states:
+            st = states[list(states)[int(rng.integers(0, len(states)))]]
+            st.cpus_free = min(st.cpus_free + 1.0, st.info.cpus)
+            idx.touch(st.info.name)
+        else:
+            views = [st.view() for st in states.values()]
+            a = oracle.pick(task, views)
+            b = indexed.pick_indexed(idx, 1.0, GiB, 0)
+            assert a == b, (step, a, b)
+            assert oracle._ptr == indexed._ptr
+
+
+# ---------------------------------------------------------------------------
+# full-engine oracle: indexed placement ≡ linear scan
+# ---------------------------------------------------------------------------
+def _churn_oracle_case(seed, strategy, arbiter):
+    rng = np.random.default_rng(seed)
+    # cluster with duplicate-capacity (and duplicate-speed) nodes so
+    # placement constantly hits equal-key tie-breaks
+    n_nodes = int(rng.integers(3, 6))
+    node_specs = []
+    for i in range(n_nodes):
+        node_specs.append((f"n{i:02d}", 4.0, 8,
+                           1.0 if i % 2 == 0 else 1.2))
+    fail_at = float(rng.uniform(15.0, 60.0))
+    fail_node = node_specs[int(rng.integers(0, n_nodes))][0]
+    join_at = float(rng.uniform(20.0, 90.0))
+    slow_at = float(rng.uniform(10.0, 80.0))
+    slow_node = node_specs[int(rng.integers(0, n_nodes))][0]
+    wf_seeds = [int(rng.integers(0, 1000)) for _ in range(2)]
+    shares = {f"wf-{i}": float(1 + i) for i in range(2)}
+
+    def run(legacy):
+        nodes = [cpu_node(name, cpus=c, mem_gib=m, speed_factor=s)
+                 for name, c, m, s in node_specs]
+        sim = ClusterSimulator(nodes, SimConfig(seed=seed % 100))
+        cws = CommonWorkflowScheduler(adapter=sim, strategy=strategy,
+                                      arbiter=arbiter, legacy_scan=legacy,
+                                      retire_finished=not legacy)
+        for wid, share in shares.items():
+            cws.set_workflow_share(wid, share)
+        sim.attach(cws)
+        dags = []
+        for i, s in enumerate(wf_seeds):
+            dag = build_workflow("chipseq", seed=s, workflow_id=f"wf-{i}",
+                                 n_samples=2)
+            dags.append(dag)
+            sim.submit_workflow_at(5.0 * i, dag)
+        sim.fail_node_at(fail_at, fail_node)
+        sim.join_node_at(join_at, cpu_node("x-join", cpus=4.0, mem_gib=8))
+        sim.slow_node_at(slow_at, slow_node, 0.7)
+        sim.run(until=5000.0)
+        return sorted(
+            (t.task_id, t.node, t.state.value,
+             round(t.start_time, 9), round(t.end_time, 9))
+            for d in dags for t in d.tasks.values())
+
+    assert run(legacy=True) == run(legacy=False), (
+        f"indexed placement diverged from linear scan "
+        f"(seed={seed}, strategy={strategy}, arbiter={arbiter})")
+
+
+_ORACLE_STRATEGIES = sorted(STRATEGIES)
+_ORACLE_ARBITERS = ["first_appearance", "fair_share", "strict_priority"]
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                           # pragma: no cover
+    @pytest.mark.parametrize("strategy", _ORACLE_STRATEGIES)
+    def test_indexed_placement_equals_linear_scan(strategy):
+        """Deterministic fallback when hypothesis is unavailable."""
+        for i, arbiter in enumerate(_ORACLE_ARBITERS):
+            _churn_oracle_case(17 + i, strategy, arbiter)
+else:
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 2 ** 31),
+           strategy=st.sampled_from(_ORACLE_STRATEGIES),
+           arbiter=st.sampled_from(_ORACLE_ARBITERS))
+    def test_indexed_placement_equals_linear_scan(seed, strategy, arbiter):
+        _churn_oracle_case(seed, strategy, arbiter)
+
+
+# ---------------------------------------------------------------------------
+# incremental mem_cap: max up-node memory across churn
+# ---------------------------------------------------------------------------
+def test_mem_cap_survives_max_mem_node_failure():
+    cws = CommonWorkflowScheduler(adapter=_NullAdapter())
+    for name, gib in [("small", 8), ("mid", 16), ("big", 64)]:
+        cws.add_node(NodeInfo(name, cpus=4, mem_bytes=gib * GiB), now=0.0)
+
+    def fresh_max():
+        return max((st.info.mem_bytes for st in cws.nodes.values()
+                    if st.up), default=0)
+
+    assert cws._node_index.max_mem_total() == fresh_max() == 64 * GiB
+    # an OOM-doubled retry is capped at the biggest node
+    dag = WorkflowDAG("w")
+    dag.add_task(TaskSpec(task_id="w.t0", name="p",
+                          resources=Resources(cpus=1.0, mem_bytes=20 * GiB)))
+    cws.submit_workflow(dag, now=0.0)
+    task = dag.task("w.t0")
+    task.attempt = 3                         # 20 GiB * 8 >> any node
+    assert cws._memory_for(task) == 64 * GiB
+    # the max-memory node dies: the cap must follow the new maximum
+    cws.remove_node("big", now=1.0)
+    assert cws._node_index.max_mem_total() == fresh_max() == 16 * GiB
+    assert cws._memory_for(task) == 16 * GiB
+    # and recover when a bigger node joins
+    cws.add_node(NodeInfo("huge", cpus=4, mem_bytes=128 * GiB), now=2.0)
+    assert cws._node_index.max_mem_total() == fresh_max() == 128 * GiB
+    cws.remove_node("small", now=3.0)
+    cws.remove_node("huge", now=4.0)
+    assert cws._node_index.max_mem_total() == fresh_max() == 16 * GiB
+
+
+# ---------------------------------------------------------------------------
+# leaks: index tracks live up-nodes; tombstones stay bounded
+# ---------------------------------------------------------------------------
+def test_index_size_tracks_live_up_nodes_after_churn():
+    rng = np.random.default_rng(11)
+    cws = CommonWorkflowScheduler(adapter=_NullAdapter(), strategy="original")
+    spare = 0
+    for _ in range(6):
+        cws.add_node(NodeInfo(f"n{spare}", cpus=4, mem_bytes=8 * GiB))
+        spare += 1
+    # register the spread order structure and run rounds between churn
+    dag = WorkflowDAG("w")
+    for i in range(30):
+        dag.add_task(TaskSpec(task_id=f"w.t{i}", name="p",
+                              resources=Resources(cpus=1.0, mem_bytes=GiB)))
+    cws.submit_workflow(dag, now=0.0)
+    for step in range(60):
+        now = float(step + 1)
+        op = rng.choice(["join", "leave", "finish", "round"])
+        if op == "join":
+            cws.add_node(NodeInfo(f"n{spare}", cpus=4, mem_bytes=8 * GiB),
+                         now=now)
+            spare += 1
+        elif op == "leave" and len(cws.nodes) > 1:
+            name = list(cws.nodes)[int(rng.integers(0, len(cws.nodes)))]
+            cws.remove_node(name, now=now)
+        elif op == "finish" and cws.allocations:
+            tid = next(iter(cws.allocations))
+            cws.on_task_finished(tid, now, TaskResult(True))
+        cws.schedule_pending(now)
+        up = sum(1 for st in cws.nodes.values() if st.up)
+        sizes = cws._node_index.sizes()
+        assert sizes["entries"] == up == cws._node_index.size()
+        assert sizes["ring"] == up
+        assert sizes["mem_multiset"] == up
+        for oid, count in sizes.items():
+            if oid.startswith("order_"):
+                assert count == up, (oid, count, up)
+
+
+def test_finished_workflows_retire_to_bounded_tombstones():
+    sim = ClusterSimulator([cpu_node("n0"), cpu_node("n1")],
+                           SimConfig(seed=0))
+    cws = CommonWorkflowScheduler(adapter=sim, retired_max=3)
+    sim.attach(cws)
+    # per-workflow tenant policy must retire with the workflow (no
+    # history-bound growth; reborn ids start fresh)
+    cws.set_workflow_share("wf-0", 4.0)
+    cws.set_workflow_strategy("wf-0", "fifo_rr")
+    dags = []
+    for i in range(5):
+        dag = WorkflowDAG(f"wf-{i}")
+        dag.add_task(TaskSpec(task_id=f"wf-{i}.t0", name="p",
+                              resources=Resources(cpus=1.0, mem_bytes=GiB),
+                              base_runtime_s=1.0))
+        dags.append(dag)
+        sim.submit_workflow_at(float(i), dag)
+    sim.run()
+    assert all(d.succeeded() for d in dags)
+    # all five evicted from the live map; only the 3 newest tombstones kept
+    assert cws.dags == {}
+    assert list(cws._retired) == ["wf-2", "wf-3", "wf-4"]
+    assert "wf-0" not in cws.workflow_shares
+    assert "wf-0" not in cws.workflow_strategies
+    assert cws.workflow_done("wf-4")
+    assert cws.task_state("wf-4", "wf-4.t0") == TaskState.SUCCEEDED
+    with pytest.raises(KeyError):
+        cws.workflow_done("wf-0")            # aged out: unknown again
+    # late/duplicate reports for an evicted workflow are ignored leniently
+    before = cws.stats()
+    cws.on_task_finished("wf-4.t0", 99.0, TaskResult(True))
+    cws.on_task_started("wf-3.t0", 99.0)
+    assert cws.stats()["running"] == before["running"] == 0
+    assert cws.task_state("wf-4", "wf-4.t0") == TaskState.SUCCEEDED
+    # a reborn workflow id drops its tombstone and starts fresh
+    dag = WorkflowDAG("wf-4")
+    dag.add_task(TaskSpec(task_id="wf-4.t1", name="p",
+                          resources=Resources(cpus=1.0, mem_bytes=GiB),
+                          base_runtime_s=1.0))
+    cws.submit_workflow(dag, now=100.0)
+    assert "wf-4" in cws.dags and "wf-4" not in cws._retired
+
+
+def test_retirement_keeps_op_counts_whole_history():
+    sim = ClusterSimulator([cpu_node("n0")], SimConfig(seed=0))
+    cws = CommonWorkflowScheduler(adapter=sim)
+    sim.attach(cws)
+    dag = WorkflowDAG("w")
+    dag.add_task(TaskSpec(task_id="w.t0", name="p",
+                          resources=Resources(cpus=1.0, mem_bytes=GiB),
+                          base_runtime_s=1.0))
+    sim.submit_workflow_at(0.0, dag)
+    sim.run()
+    assert dag.succeeded() and "w" not in cws.dags
+    counts = cws.op_counts()
+    assert counts["readiness_ops"] >= dag.readiness_ops > 0
