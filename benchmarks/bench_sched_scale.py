@@ -24,6 +24,18 @@ undersized cluster (a permanent unplaceable backlog). Asserted:
   * fair-share deficits always sum to ~0 (share conservation) and their
     mean magnitude is no worse than under first-appearance arbitration.
 
+The **preemption sweep** pins the preemptive-arbitration claim: the same
+mixed-tenant shape with a mid-run share flip (the smallest-share tenant
+becomes the biggest and vice versa — the runtime share change the CWSI
+paper's "future plans" names). Asserted: the worst (most starved)
+tenant's mean dominant-share deficit after the flip is *strictly lower*
+under preemptive fair_share (``max_preemptions_per_round=4``) than under
+the non-preemptive engine, and the knob-0 engine's (task, node, start)
+traces are bit-identical to an engine whose ``preempt()`` raises — i.e.
+disabled preemption is provably absent, not merely idle. CI re-asserts
+both flags (``preempt_fairness_improved``,
+``preempt_off_traces_identical``) from the archived JSON.
+
 The **coalesced-burst sweep** pins the constant-time event path: 10
 symmetric tenants of wide zero-jitter fan-out stages on an undersized
 homogeneous cluster, so whole waves of tasks finish at the *same virtual
@@ -91,6 +103,13 @@ HEFT_SAMPLES = 6 if SMOKE else 17
 TENANT_WORKFLOWS = 4 if SMOKE else 10
 TENANT_SAMPLES = 6 if SMOKE else 20
 TENANT_NODES = 4
+
+# preemption sweep: the same mixed-tenant shape with a mid-run share
+# flip (one tenant's share jumps, one collapses, re-asserted a few times
+# as a real tenant would re-PUT); preemptive vs non-preemptive fair_share
+PREEMPT_KNOB = 4
+PREEMPT_FLIP_T = 1000.0          # safely inside every tenant's makespan
+PREEMPT_REASSERTS = 3            # extra PUTs, each a preemption trigger
 
 # coalesced-burst sweep: symmetric tenants, zero-jitter wide stages, an
 # undersized homogeneous cluster → same-timestamp completion bursts with a
@@ -286,6 +305,117 @@ def _mixed_tenant(verbose: bool) -> Tuple[Dict[str, float], Dict[str, Any]]:
         "tenant_deficit_abs_mean_first_appearance": fifo["deficit_abs_mean"],
     }, {"fair_share": fair, "fair_share_legacy": fair_legacy,
         "first_appearance": fifo}
+
+
+def _preempt_sweep(knob: int, tripwire: bool = False) -> Dict[str, Any]:
+    """Mixed-tenant run with a mid-run share flip.
+
+    ``knob`` is ``max_preemptions_per_round`` (0 = the non-preemptive
+    engine). ``tripwire`` swaps in a fair_share arbiter whose preempt()
+    raises — proving the knob-0 engine never consults it while its
+    decisions stay bit-identical (the CI flag re-asserts this from the
+    archived JSON)."""
+    from repro.core.arbiter import WeightedFairShareArbiter
+
+    class _Tripwire(WeightedFairShareArbiter):
+        def preempt(self, running, actx):
+            raise AssertionError("preempt() consulted with the knob at 0")
+
+    sim = ClusterSimulator(heterogeneous_cluster(TENANT_NODES),
+                           SimConfig(seed=13))
+    cws = CommonWorkflowScheduler(
+        adapter=sim, strategy="rank_min_rr",
+        arbiter=_Tripwire() if tripwire else "fair_share",
+        max_preemptions_per_round=knob)
+    shares = {f"wf-{i}": float(1 + i % 4) for i in range(TENANT_WORKFLOWS)}
+    for wid, share in shares.items():
+        cws.set_workflow_share(wid, share)
+    sim.attach(cws)
+
+    worst_after_flip: List[float] = []
+    inner = cws.schedule
+
+    def sampling_schedule(now: float) -> int:
+        n = inner(now)
+        if now >= PREEMPT_FLIP_T and cws._ready \
+                and not all(d.finished() for d in cws.dags.values()):
+            d = cws.arbiter_status()["deficits"]
+            if d:
+                worst_after_flip.append(max(d.values()))
+        return n
+
+    cws.schedule = sampling_schedule
+    dags = []
+    for i in range(TENANT_WORKFLOWS):
+        dag = build_workflow("rnaseq", seed=200 + i, workflow_id=f"wf-{i}",
+                             n_samples=TENANT_SAMPLES)
+        dags.append(dag)
+        sim.submit_workflow_at(0.0, dag)
+
+    def flip(now: float) -> None:
+        # the smallest-share tenant becomes the biggest and vice versa —
+        # exactly the runtime share change the CWSI "future plans" names
+        cws.set_workflow_share("wf-0", 12.0)
+        cws.set_workflow_share("wf-3", 0.5)
+
+    sim.call_at(PREEMPT_FLIP_T, flip)
+    for k in range(1, PREEMPT_REASSERTS + 1):
+        sim.call_at(PREEMPT_FLIP_T + 400.0 * k, flip)
+    sim.run()
+    assert all(d.succeeded() for d in dags)
+    trace = sorted((t.task_id, t.node, round(t.start_time, 9))
+                   for d in dags for t in d.tasks.values())
+    return {
+        "trace": trace,
+        "makespans": [cws.provenance.makespan(d.workflow_id) for d in dags],
+        "preemptions": cws.preemptions,
+        "preempt_rounds": cws.preempt_rounds,
+        "worst_deficit_mean": (sum(worst_after_flip)
+                               / max(len(worst_after_flip), 1)),
+        "samples": len(worst_after_flip),
+    }
+
+
+def _preemptive_arbitration(verbose: bool) -> Tuple[Dict[str, float],
+                                                    Dict[str, Any]]:
+    """Mid-run share flip: preemptive fair_share must track the new
+    shares strictly better than the non-preemptive engine, and the
+    knob-0 engine must be bit-identical to one that cannot preempt."""
+    off = _preempt_sweep(knob=0)
+    on = _preempt_sweep(knob=PREEMPT_KNOB)
+    guard = _preempt_sweep(knob=0, tripwire=True)
+    identical = off["trace"] == guard["trace"]
+    if verbose:
+        print(f"  preemption {TENANT_WORKFLOWS} tenants, share flip at "
+              f"t={PREEMPT_FLIP_T:.0f} (knob {PREEMPT_KNOB})")
+        print(f"    worst-tenant deficit after flip: non-preemptive "
+              f"{off['worst_deficit_mean']:.4f}  preemptive "
+              f"{on['worst_deficit_mean']:.4f}  "
+              f"({on['preemptions']} launches preempted over "
+              f"{on['preempt_rounds']} passes)")
+        print(f"    knob=0 traces identical to preempt-free arbiter: "
+              f"{identical} (preemptions: {off['preemptions']})")
+    # the tentpole fairness claim: after the flip the worst (most
+    # starved) tenant's dominant-share deficit is strictly lower when
+    # over-share work can be preempted
+    assert on["preemptions"] > 0, "preemption never fired"
+    assert off["preemptions"] == 0 and guard["preemptions"] == 0
+    assert on["worst_deficit_mean"] < off["worst_deficit_mean"], (
+        on["worst_deficit_mean"], off["worst_deficit_mean"])
+    # disabled == absent, bit for bit
+    assert identical, "knob-0 engine diverged from the preempt-free one"
+    metrics = {
+        "preempt_worst_deficit_nonpreemptive": off["worst_deficit_mean"],
+        "preempt_worst_deficit_preemptive": on["worst_deficit_mean"],
+        "preempt_launches": float(on["preemptions"]),
+        "preempt_fairness_improved": 1.0,
+        "preempt_off_traces_identical": 1.0 if identical else 0.0,
+    }
+    sweeps = {
+        "non_preemptive": {k: v for k, v in off.items() if k != "trace"},
+        "preemptive": {k: v for k, v in on.items() if k != "trace"},
+    }
+    return metrics, sweeps
 
 
 def _burst_workflow(wid: str, width: int, stages: int) -> WorkflowDAG:
@@ -567,6 +697,8 @@ def run(verbose: bool = True) -> Tuple[float, Dict[str, float]]:
         })
         tenant_out, sweeps["mixed_tenant"] = _mixed_tenant(verbose)
         out.update(tenant_out)
+        preempt_out, sweeps["preemption"] = _preemptive_arbitration(verbose)
+        out.update(preempt_out)
         burst_out, sweeps["coalesced_burst"] = _coalesced_burst(verbose)
         out.update(burst_out)
         scale_out, sweeps["node_scale"] = _node_scale(verbose)

@@ -30,6 +30,11 @@ class LocalExecutor:
         self._lock = threading.RLock()          # CWS engine is not thread-safe
         self._t0 = time.monotonic()
         self._cancelled: Dict[str, bool] = {}
+        # task_id -> live launch id: lets a finishing worker retire its
+        # own cancel-flag entry without clobbering a relaunch's (kills —
+        # speculation losers and arbiter preemptions alike — may be
+        # followed by a relaunch of the same task id)
+        self._launches: Dict[str, int] = {}
         self.cws: Optional[CommonWorkflowScheduler] = None
         self.outputs: Dict[str, Any] = {}
 
@@ -45,13 +50,21 @@ class LocalExecutor:
     # ---- ClusterAdapter ----
     def launch(self, task: Task, node: str, mem_alloc: int) -> None:
         self._cancelled[task.task_id] = False
+        self._launches[task.task_id] = task.launch_id
         # capture the launch id now: the Task object is shared, so a
         # relaunch would otherwise make a stale worker report under the
         # live launch's id
         self._pool.submit(self._run, task, node, task.launch_id)
 
     def kill(self, task_id: str) -> None:
-        self._cancelled[task_id] = True       # cooperative: result discarded
+        # cooperative: the worker's result is discarded. A preempted
+        # task may be relaunched immediately after this kill; launch()
+        # then resets the flag, and the *old* worker's late report is
+        # rejected by the engine on its stale launch id. A kill with no
+        # tracked launch (its worker already drained) has nobody left to
+        # suppress — setting the flag would leak an entry forever.
+        if task_id in self._launches:
+            self._cancelled[task_id] = True
 
     def _run(self, task: Task, node: str, launch_id: int) -> None:
         assert self.cws is not None
@@ -71,7 +84,15 @@ class LocalExecutor:
         if isinstance(out, dict) and "peak_mem_bytes" in out:
             peak = int(out["peak_mem_bytes"])
         with self._lock:
-            if self._cancelled.get(task.task_id):
+            cancelled = self._cancelled.get(task.task_id)
+            if self._launches.get(task.task_id) == launch_id:
+                # this worker owns the live launch: retire the cancel
+                # bookkeeping — cancelled or not — so the maps stay
+                # bounded by in-flight work (a killed-but-never-
+                # relaunched task must not leak its entries)
+                self._launches.pop(task.task_id, None)
+                self._cancelled.pop(task.task_id, None)
+            if cancelled:
                 return
             if ok:
                 self.outputs[task.task_id] = out

@@ -168,6 +168,13 @@ class ClusterSimulator:
     def submit_workflow_at(self, time: float, dag: WorkflowDAG) -> None:
         self._push(time, "WF_SUBMIT", {"dag": dag})
 
+    def call_at(self, time: float, fn: Callable[[float], None]) -> None:
+        """Run ``fn(now)`` at a virtual instant (before that instant's
+        coalesced scheduling round). The hook for mid-run tenant-policy
+        changes — e.g. a CWSI ``PUT .../share`` flip driving preemptive
+        arbitration — without teaching the event loop new verbs."""
+        self._push(time, "CALL", {"fn": fn})
+
     # ------------------------------------------------------------------
     def _push(self, time: float, kind: str, payload: Dict[str, Any]) -> None:
         heapq.heappush(self._heap, _Event(time, next(self._seq), kind, payload))
@@ -238,6 +245,9 @@ class ClusterSimulator:
 
             elif ev.kind == "WF_SUBMIT":
                 cws.submit_workflow(ev.payload["dag"], self.now)
+
+            elif ev.kind == "CALL":
+                ev.payload["fn"](self.now)
 
             elif ev.kind == "SPEC_CHECK":
                 # only a round that can change anything: a speculative

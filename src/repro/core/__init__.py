@@ -15,8 +15,10 @@ from .arbiter import (  # noqa: F401
     Arbiter,
     ArbiterContext,
     FirstAppearanceArbiter,
+    PreemptionCandidate,
     StrictPriorityArbiter,
     WeightedFairShareArbiter,
+    WorkflowQuota,
     deficits,
     dominant_cost,
     make_arbiter,
@@ -35,6 +37,7 @@ from .scheduler import (  # noqa: F401
     ClusterAdapter,
     CommonWorkflowScheduler,
     NodeInfo,
+    QuotaExceededError,
     RetiredWorkflow,
     TaskResult,
 )

@@ -28,6 +28,23 @@ cluster totals (the DRF measure). ``deficits()`` reports, per unfinished
 workflow, ``share-weighted target − actual usage``; the targets are
 normalised to current total usage, so deficits always sum to ~0 (share
 conservation — asserted by the property suite and ``make bench``).
+
+Preemptive arbitration (the CWSI "future plans" reaction to runtime
+share changes) adds a second verb: ``preempt(running, actx)`` selects
+victim *launches* to kill-and-requeue when the share assignment moved
+under running work. The default is a no-op; ``WeightedFairShareArbiter``
+picks victims on over-share workflows, smallest lost work first, never
+pushing a victim below its own fair target, and only when an under-share
+workflow has ready tasks waiting to absorb the freed capacity. The
+engine bounds a round's victims by ``max_preemptions_per_round``
+(0 = preemption off, bit-identical to the non-preemptive engine) and
+charges each victim's lost allocation to its *preemption debt*, which
+``order``/``preempt`` count as if it were still running — so a victim
+cannot immediately reclaim the slot it was just evicted from (fair_share
+converges instead of oscillating). Per-tenant queue quotas ride the same
+context: a workflow at its ``max_running`` cap is skipped by the
+deficit-heap pop (an O(log W) check, not a rescan), so its backlog never
+claims emission slots it cannot use.
 """
 from __future__ import annotations
 
@@ -86,6 +103,36 @@ def deficits(shares: Mapping[str, float], usage: Mapping[str, float],
     }
 
 
+@dataclass(frozen=True)
+class WorkflowQuota:
+    """Per-tenant queue quota (CWSI ``PUT /workflow/{wid}/quota``).
+
+    ``max_running`` caps concurrently allocated launches (speculative
+    copies included — they hold real resources); enforced at emission
+    time so a capped workflow's backlog never claims order slots it
+    cannot use. ``max_queued`` caps queued (non-terminal, not-running)
+    tasks; enforced at submission (CWSI answers 429). ``None`` means
+    unlimited."""
+
+    max_running: Optional[int] = None
+    max_queued: Optional[int] = None
+
+
+@dataclass(frozen=True)
+class PreemptionCandidate:
+    """One running launch, as offered to ``Arbiter.preempt``.
+
+    ``cost`` is the allocation's dominant share (the same scalar the
+    usage accounting charges); ``progress`` is the work lost if this
+    launch is killed (seconds since start; 0.0 for launches that are
+    scheduled but not yet running — the cheapest victims)."""
+
+    task: Task
+    workflow_id: str
+    cost: float
+    progress: float
+
+
 @dataclass
 class ArbiterContext:
     """Everything an arbiter may consult, assembled per scheduling round.
@@ -112,6 +159,24 @@ class ArbiterContext:
     keyed_queue_fn: Optional[
         Callable[[str, List[Task]], Optional[List[Tuple[Any, Task]]]]
     ] = None
+    # --- preemptive arbitration + quotas (defaults keep unit rigs and
+    # non-preemptive engines on the exact pre-preemption code path) ---
+    # per-workflow queue quotas (wid -> WorkflowQuota); empty = none set
+    quotas: Mapping[str, WorkflowQuota] = field(default_factory=dict)
+    # live allocation count for one workflow (quota checks are O(1) pulls
+    # through this, not a rescan of the allocation map)
+    running_count_fn: Callable[[str], int] = lambda wid: 0
+    # *unplaceable* READY backlog per workflow (tasks no free node can
+    # currently fit) — preemption only fires when an under-share
+    # workflow has waiting work that needs capacity freed for it; work
+    # that already fits will launch without anyone dying for it
+    ready_counts: Mapping[str, int] = field(default_factory=dict)
+    # dominant-share cost of killed-but-not-yet-relaunched work, per
+    # victim workflow: counted as if still running so a fresh victim
+    # cannot immediately reclaim its slot (anti-oscillation)
+    preempt_debt: Mapping[str, float] = field(default_factory=dict)
+    # engine bound on victims per preemption round; 0 = preemption off
+    max_preemptions: int = 0
     _appearance: Optional[Dict[str, int]] = field(default=None, repr=False)
     _usage: Optional[Dict[str, float]] = field(default=None, repr=False)
     _totals: Optional[Dict[str, float]] = field(default=None, repr=False)
@@ -144,6 +209,23 @@ class ArbiterContext:
             return None
         return self.keyed_queue_fn(wid, tasks)
 
+    def charged_usage(self, wid: str) -> float:
+        """Running usage plus preemption debt — the fairness view.
+
+        Guarded add: with no debt the float is the *identical object* the
+        usage map holds, so the non-preemptive ordering stays bit-exact.
+        """
+        usage = self.usage.get(wid, 0.0)
+        debt = self.preempt_debt.get(wid)
+        return usage if not debt else usage + debt
+
+    def running_allowance(self, wid: str) -> Optional[int]:
+        """Remaining ``max_running`` emission budget (None = unlimited)."""
+        quota = self.quotas.get(wid)
+        if quota is None or quota.max_running is None:
+            return None
+        return max(quota.max_running - self.running_count_fn(wid), 0)
+
 
 class Arbiter(ABC):
     """Interleaves per-workflow priority lists into one global order."""
@@ -153,6 +235,18 @@ class Arbiter(ABC):
     @abstractmethod
     def order(self, ready: List[Task], actx: ArbiterContext) -> List[Task]:
         ...
+
+    # ------------------------------------------------------------------
+    def preempt(self, running: List[PreemptionCandidate],
+                actx: ArbiterContext) -> List[PreemptionCandidate]:
+        """Select victim launches to kill-and-requeue.
+
+        Consulted by the engine only when a preemption trigger fired
+        (share/arbiter change, new tenant) *and*
+        ``max_preemptions_per_round > 0`` — the default engine never
+        calls it. Policies without a preemption notion keep this no-op:
+        an ordering-only arbiter is still a valid arbiter."""
+        return []
 
     # ------------------------------------------------------------------
     def _workflow_queues(
@@ -270,12 +364,16 @@ class WeightedFairShareArbiter(Arbiter):
     def order(self, ready: List[Task], actx: ArbiterContext) -> List[Task]:
         queues = self._workflow_queues(ready, actx)
         if len(queues) <= 1:
-            return queues[0][1] if queues else []
+            if not queues:
+                return []
+            wid, q = queues[0]
+            allow = actx.running_allowance(wid)
+            return q if allow is None else q[:allow]
         totals = actx.totals
         virt: Dict[str, float] = {}
         share: Dict[str, float] = {}
         for wid, _ in queues:
-            virt[wid] = actx.usage.get(wid, 0.0)
+            virt[wid] = actx.charged_usage(wid)
             share[wid] = max(actx.share_of(wid), 0.0)
 
         def key(wid: str) -> Tuple[float, float]:
@@ -290,10 +388,15 @@ class WeightedFairShareArbiter(Arbiter):
         # (tier, usage/share ratio, appearance, wid). Only the emitting
         # workflow's ratio changes per emission (its virtual charge), so
         # it alone is re-pushed — an emission costs O(log W) instead of
-        # the former O(W) min() scan over every live queue.
+        # the former O(W) min() scan over every live queue. max_running
+        # quotas are enforced right here: a capped workflow simply is not
+        # (re-)pushed once its emission allowance is spent, so the check
+        # is O(log W) alongside the pop, never a queue rescan.
         heap: List[Tuple[float, float, int, str, List[Task]]] = []
+        allowance: Dict[str, Optional[int]] = {}
         for wid, q in queues:
-            if q:
+            allowance[wid] = actx.running_allowance(wid)
+            if q and allowance[wid] != 0:
                 tier, ratio = key(wid)
                 heap.append((tier, ratio,
                              actx.appearance.get(wid, 1 << 30), wid, q))
@@ -311,10 +414,81 @@ class WeightedFairShareArbiter(Arbiter):
                 dominant_cost(res.cpus, res.mem_bytes, res.chips, totals),
                 1e-9,
             )
-            if heads[wid] < len(q):
+            allow = allowance[wid]
+            if allow is not None:
+                allow -= 1
+                allowance[wid] = allow
+            if heads[wid] < len(q) and (allow is None or allow > 0):
                 tier, ratio = key(wid)
                 heapq.heappush(heap, (tier, ratio, app, wid, q))
         return out
+
+    def preempt(self, running: List[PreemptionCandidate],
+                actx: ArbiterContext) -> List[PreemptionCandidate]:
+        """Victims on over-share workflows, smallest lost work first.
+
+        Per-workflow fair targets split the *current total running usage*
+        by share weight (the same normalisation as ``deficits()``), held
+        fixed over the round: the capacity being reallocated is what is
+        running now. A launch is eligible only while its workflow is
+        still *above* its own target — preemption trims a tenant toward
+        its entitlement, overshooting below it by at most one launch's
+        cost (launches are indivisible; without that allowance a tenant
+        holding the cluster in one big launch could never be preempted at
+        all) — and the round takes no more victims than there are
+        *unplaceable* ready tasks waiting on under-share workflows (a
+        kill with no starved beneficiary is pure churn — the engine
+        already filters ``ready_counts`` down to work no free node can
+        fit). Victims are taken cheapest-first:
+        scheduled-not-started launches (zero lost work), then
+        shortest-running, ties by workflow appearance then task id, so
+        the selection is deterministic.
+        """
+        budget = actx.max_preemptions
+        if budget <= 0 or not running:
+            return []
+        wids = {c.workflow_id for c in running}
+        wids.update(actx.ready_counts)
+        # two usage views, deliberately asymmetric: victim eligibility
+        # runs on REAL running usage (only capacity that is actually
+        # running can be reclaimed — outstanding debt must not make an
+        # already-preempted tenant look over-share again, or repeated
+        # triggers would strip it below its real entitlement), while the
+        # beneficiary check runs on CHARGED usage (debt counts: a fresh
+        # victim's requeued backlog must not read as starvation and set
+        # off counter-preemption of the tenants it just yielded to).
+        real = {wid: actx.usage.get(wid, 0.0) for wid in wids}
+        charged = {wid: actx.charged_usage(wid) for wid in wids}
+        share = {wid: max(actx.share_of(wid), 0.0) for wid in wids}
+        wsum = sum(share.values())
+        total = sum(real.values())
+        if wsum <= 0.0 or total <= 0.0:
+            return []
+        target = {wid: total * share[wid] / wsum for wid in wids}
+        # beneficiaries: under-target workflows with ready work waiting
+        waiting = sum(
+            n for wid, n in actx.ready_counts.items()
+            if n > 0 and share.get(wid, 0.0) > 0.0
+            and charged.get(wid, 0.0) < target.get(wid, 0.0) - 1e-12)
+        budget = min(budget, waiting)
+        if budget <= 0:
+            return []
+        pool = sorted(
+            (c for c in running if real[c.workflow_id]
+             > target[c.workflow_id] + 1e-12),
+            key=lambda c: (c.progress,
+                           actx.appearance.get(c.workflow_id, 1 << 30),
+                           c.task.task_id))
+        victims: List[PreemptionCandidate] = []
+        left = dict(real)
+        for cand in pool:
+            if len(victims) >= budget:
+                break
+            wid = cand.workflow_id
+            if left[wid] > target[wid] + 1e-12:
+                victims.append(cand)
+                left[wid] -= cand.cost
+        return victims
 
 
 class StrictPriorityArbiter(Arbiter):

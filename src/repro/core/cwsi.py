@@ -18,6 +18,7 @@ touching either side. The verb surface follows Lehmann et al. (CCGrid'23):
   GET  /{version}/workflow/{wid}/state                 all task states
   PUT  /{version}/workflow/{wid}/strategy              choose strategy
   PUT  /{version}/workflow/{wid}/share                 set fair-share weight
+  PUT  /{version}/workflow/{wid}/quota                 set queue quota
   POST /{version}/schedule                             scheduling barrier
   GET  /{version}/arbiter                              arbitration status
   PUT  /{version}/arbiter                              choose arbiter policy
@@ -67,9 +68,39 @@ per-workflow task-state counts, and the ``arbiterRounds`` /
 ``placementProbes`` / ``feasibilityChecks`` counters that the scale
 benchmark asserts against.
 
+Preemption and quotas
+---------------------
+An engine built with ``max_preemptions_per_round > 0`` reacts to share
+changes at *runtime* (the CWSI paper's "future plans" item): a
+``PUT .../share``, ``PUT /arbiter``, or a new tenant's arrival arms one
+preemption pass, and the next scheduling round may kill-and-requeue up
+to that many victim launches on over-share workflows (smallest lost
+work first, never below the victim's own fair target). The killed
+allocation is charged to the victim's *preemption debt* until the task
+runs again, so fair share converges instead of oscillating;
+``GET /arbiter`` reports ``preemptions`` / ``preemptRounds`` /
+``preemptDebt`` / ``maxPreemptionsPerRound``. With the default bound of
+0 the engine is bit-identical to the non-preemptive one.
+
+``PUT /workflow/{wid}/quota`` with body
+``{"maxRunning": <int >= 0 | null>, "maxQueued": <int >= 0 | null>}``
+sets a per-tenant queue quota (both ``null`` clears it). ``maxRunning``
+caps concurrently allocated launches — enforced where the fair-share
+deficit heap emits, so the check is O(log W) — and ``maxQueued`` caps
+queued tasks: a ``POST .../task`` beyond it answers **429** (policy
+rejection on a well-formed request; back off and retry), mutating
+nothing. Quotas appear in ``GET /arbiter`` and ``GET /stats``. As with
+shares, numbers are strictly typed: NaN/inf/float/bool/string bounds
+are 400s that provably mutate no state (conformance-pinned).
+
+Abandoned registrations are reaped: a workflow registered but never
+given tasks falls out of the engine after ``registration_ttl`` seconds
+(a later state query answers 404, like any unknown id).
+
 Error envelope: every response is ``{"status": int, "body": {...}}``;
-malformed bodies are 400, unknown resources 404, and an error response
-never mutates scheduler state (the conformance suite pins this).
+malformed bodies are 400, unknown resources 404, quota rejections 429,
+and an error response never mutates scheduler state (the conformance
+suite pins this).
 """
 from __future__ import annotations
 
@@ -78,7 +109,7 @@ from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Tuple
 
 from .dag import TaskSpec, TaskState
-from .scheduler import CommonWorkflowScheduler
+from .scheduler import CommonWorkflowScheduler, QuotaExceededError
 
 CWSI_VERSION = "v1"
 
@@ -138,6 +169,10 @@ class CWSIServer:
             status, body = e.code, {"error": str(e)}
         except KeyError as e:
             status, body = 404, {"error": f"not found: {e}"}
+        except QuotaExceededError as e:
+            # before the plain-ValueError arm (it subclasses ValueError):
+            # a quota rejection is policy, not a malformed request
+            status, body = 429, {"error": str(e)}
         except ValueError as e:
             status, body = 400, {"error": str(e)}
         return json.dumps({"status": status, "body": body})
@@ -159,7 +194,10 @@ class CWSIServer:
         if method == "POST" and parts[:1] == ["workflow"] and len(parts) == 2:
             wid = parts[1]
             meta = req.body or {}
-            self.scheduler.register_workflow(wid, meta.get("name", wid), meta)
+            # the server clock stamps the registration so abandoned
+            # (never-submitted-to) registrations age out of the engine
+            self.scheduler.register_workflow(wid, meta.get("name", wid),
+                                             meta, now=self.clock)
             return 200, {"workflowId": wid}
 
         if (method == "POST" and len(parts) == 3
@@ -238,6 +276,24 @@ class CWSIServer:
             share = self.scheduler.set_workflow_share(wid, body["share"])
             return 200, {"workflowId": wid, "share": share}
 
+        if (method == "PUT" and len(parts) == 3
+                and parts[0] == "workflow" and parts[2] == "quota"):
+            wid = parts[1]
+            body = req.body or {}
+            if not body:
+                raise CWSIError(
+                    400, "body must carry 'maxRunning' and/or 'maxQueued'")
+            unknown = set(body) - {"maxRunning", "maxQueued"}
+            if unknown:
+                raise CWSIError(
+                    400, f"unknown quota fields: {sorted(unknown)}")
+            quota = self.scheduler.set_workflow_quota(
+                wid, max_running=body.get("maxRunning"),
+                max_queued=body.get("maxQueued"))
+            return 200, {"workflowId": wid,
+                         "maxRunning": quota.max_running,
+                         "maxQueued": quota.max_queued}
+
         if method == "GET" and parts == ["arbiter"]:
             return 200, self.scheduler.arbiter_status()
 
@@ -260,6 +316,9 @@ class CWSIServer:
                 "retired": stats["retired"],
                 "indexedNodes": stats["indexed_nodes"],
                 "barrierRounds": self.barrier_rounds,
+                "quotas": stats["workflow_quotas"],
+                "preemptions": stats["preemptions"],
+                "reapedRegistrations": stats["reaped_registrations"],
             }
 
         if (method == "GET" and len(parts) == 3
@@ -347,6 +406,14 @@ class CWSIClient:
     def set_share(self, workflow_id: str, share: float) -> float:
         return self._call("PUT", f"/workflow/{workflow_id}/share",
                           {"share": share})["share"]
+
+    def set_quota(self, workflow_id: str,
+                  max_running: Optional[int] = None,
+                  max_queued: Optional[int] = None) -> Dict[str, Any]:
+        """Set (or, with both bounds None, clear) a tenant queue quota."""
+        return self._call("PUT", f"/workflow/{workflow_id}/quota",
+                          {"maxRunning": max_running,
+                           "maxQueued": max_queued})
 
     def schedule_barrier(self) -> int:
         """Close the submit batch: run one coalesced scheduling round now

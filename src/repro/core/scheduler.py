@@ -10,7 +10,14 @@ exclusively through the CWSI (``cwsi.py``). The engine owns:
   * the pluggable ``Strategy`` (ordering + placement),
   * online feeding of the prediction plugins and the provenance store,
   * straggler mitigation by speculative execution (first finisher wins),
-  * elastic node join/leave (running work on a lost node is requeued).
+  * elastic node join/leave (running work on a lost node is requeued),
+  * preemptive arbitration (``max_preemptions_per_round > 0``): share
+    changes at runtime may kill-and-requeue over-share launches, with the
+    lost work charged to the victim's deficit accounting so fair share
+    converges; per-tenant queue quotas (``max_running`` at emission,
+    ``max_queued`` at submission) bound what any one tenant can hold,
+  * a registration TTL that reaps workflows registered but never given
+    tasks (completion-driven retirement cannot see them).
 
 The event→decision path is amortized constant time: events mark the
 scheduler pending (``request_schedule``) and the driver coalesces every
@@ -50,12 +57,14 @@ from typing import Any, Callable, Dict, List, Optional, Protocol, Tuple
 from .arbiter import (
     Arbiter,
     ArbiterContext,
+    PreemptionCandidate,
+    WorkflowQuota,
     deficits as _share_deficits,
     dominant_cost,
     make_arbiter,
 )
 from .dag import DataRef, Task, TaskSpec, TaskState, WorkflowDAG, fresh_task_id
-from .node_index import NodeCapacityIndex
+from .node_index import NodeCapacityIndex, fits_demand as _fits_demand
 from .predict import FeedbackMemoryPredictor, LotaruPredictor, NodeProfile
 from .provenance import NodeEvent, ProvenanceStore, TaskTrace
 from .strategies import (
@@ -100,6 +109,14 @@ class ClusterAdapter(Protocol):
     def launch(self, task: Task, node: str, mem_alloc: int) -> None: ...
 
     def kill(self, task_id: str) -> None: ...
+
+
+class QuotaExceededError(ValueError):
+    """A submit was rejected by the tenant's ``max_queued`` quota.
+
+    Distinct from plain ``ValueError`` so the CWSI can answer 429 (back
+    off and retry) instead of 400 (client bug): a quota rejection is a
+    *policy* outcome on a well-formed request."""
 
 
 @dataclass
@@ -171,6 +188,8 @@ class CommonWorkflowScheduler:
         arbiter: str | Arbiter = "first_appearance",
         retire_finished: bool = True,
         retired_max: int = 256,
+        max_preemptions_per_round: int = 0,
+        registration_ttl: Optional[float] = 3600.0,
     ) -> None:
         self.adapter = adapter
         self.strategy: Strategy = (
@@ -243,6 +262,42 @@ class CommonWorkflowScheduler:
         )
         self.workflow_shares: Dict[str, float] = {}
         self.arbiter_rounds = 0
+        # --- preemptive arbitration (kill/requeue on share changes) ---
+        # A share/arbiter change or a new tenant's arrival *arms* one
+        # preemption pass; the next scheduling round consults
+        # arbiter.preempt() for victim launches (at most
+        # max_preemptions_per_round per pass). 0 (the default) disables
+        # the whole path: preempt() is never called and every decision is
+        # bit-identical to the non-preemptive engine (pinned by the
+        # golden traces, the bench flag, and the equivalence property).
+        self.max_preemptions_per_round = max_preemptions_per_round
+        self._preempt_pending = False
+        # dominant-share cost of preempted-but-not-relaunched work, per
+        # victim workflow (wid -> task_id -> cost). The fairness view
+        # keeps charging it (ArbiterContext.charged_usage) so a victim
+        # cannot win back its own freed slot in the very next emission;
+        # an entry clears when its task launches again or terminates.
+        self._preempt_debt: Dict[str, Dict[str, float]] = {}
+        self.preemptions = 0           # victim launches killed + requeued
+        self.preempt_rounds = 0        # rounds that consulted preempt()
+        self.preempt_triggers = 0      # share/arbiter/tenant-arrival arms
+        # --- per-tenant queue quotas (CWSI PUT .../quota) ---
+        # max_running is enforced at emission (the fair-share deficit-heap
+        # pop skips capped workflows in O(log W)) AND at launch (an O(1)
+        # guard that covers every arbiter); max_queued is enforced at
+        # submission (QuotaExceededError -> CWSI 429).
+        self.workflow_quotas: Dict[str, WorkflowQuota] = {}
+        # --- registration TTL (reap abandoned empty registrations) ---
+        # Completion-driven retirement cannot see a workflow that was
+        # registered but never given tasks (nothing ever completes), so
+        # one empty DAG used to leak per abandoned registration. Empty
+        # registrations sit in this insertion-ordered map (wid ->
+        # registered_at) and are reaped once older than the TTL; the
+        # entry leaves the moment the workflow receives its first task.
+        # None disables reaping.
+        self.registration_ttl = registration_ttl
+        self._empty_regs: Dict[str, float] = {}
+        self.reaped_registrations = 0
         # --- incremental arbiter accounting ---
         # Cluster totals and per-workflow dominant-resource usage are
         # maintained as deltas on launch/release (and recharged on the
@@ -379,21 +434,30 @@ class CommonWorkflowScheduler:
     # SWMS side (invoked by the CWSI server)
     # ------------------------------------------------------------------
     def register_workflow(self, workflow_id: str, name: str = "",
-                          meta: Optional[Dict[str, Any]] = None) -> WorkflowDAG:
+                          meta: Optional[Dict[str, Any]] = None,
+                          now: float = 0.0) -> WorkflowDAG:
+        self._reap_registrations(now)
         if workflow_id in self.dags:
+            if not self.dags[workflow_id].tasks:
+                # still empty: a re-register refreshes its TTL window
+                self._empty_regs.pop(workflow_id, None)
+                self._empty_regs[workflow_id] = now
             return self.dags[workflow_id]
         self._retired.pop(workflow_id, None)   # id reborn: drop tombstone
         dag = WorkflowDAG(workflow_id, name)
         self.dags[workflow_id] = dag
+        self._empty_regs[workflow_id] = now
         self.provenance.register_workflow(
             workflow_id, {"name": name, **(meta or {})}
         )
+        self._arm_preemption()                 # a new tenant arrived
         return dag
 
     def submit_task(self, spec: TaskSpec, deps: Tuple[str, ...] = (),
                     now: float = 0.0) -> Task:
         dag = self.dags.get(spec.workflow_id)
         pending = dag is None
+        self._check_queued_quota(spec.workflow_id, dag, adding=1)
         if pending:
             # build first, register only if the submit is valid: a rejected
             # task must not leave a half-registered workflow behind
@@ -403,6 +467,8 @@ class CommonWorkflowScheduler:
             self._retired.pop(spec.workflow_id, None)
             self.dags[spec.workflow_id] = dag
             self.provenance.register_workflow(spec.workflow_id, {"name": ""})
+            self._arm_preemption()             # a new tenant arrived
+        self._empty_regs.pop(spec.workflow_id, None)
         task.submit_time = now
         self._mark_dirty(spec.workflow_id)
         return task
@@ -410,6 +476,11 @@ class CommonWorkflowScheduler:
     def submit_workflow(self, dag: WorkflowDAG, now: float = 0.0) -> None:
         dag.validate()
         old = self.dags.get(dag.workflow_id)
+        if old is not dag:
+            # a replacement drops the old DAG's queue, so only the new
+            # tasks count against max_queued
+            self._check_queued_quota(dag.workflow_id, None,
+                                     adding=len(dag.tasks))
         if old is not None and old is not dag:
             # a replaced DAG's running tasks would complete onto same-id
             # tasks of the new DAG (phantom successes, leaked allocations)
@@ -428,7 +499,18 @@ class CommonWorkflowScheduler:
             # the old DAG is gone: release strategy/order caches keyed to it
             self._evict_workflow_caches(dag.workflow_id)
         self._retired.pop(dag.workflow_id, None)
+        if old is None:
+            self._arm_preemption()             # a new tenant arrived
+        if old is not None and old is not dag:
+            # the replaced DAG's preempted-work debt charges dead tasks
+            self._preempt_debt.pop(dag.workflow_id, None)
         self.dags[dag.workflow_id] = dag
+        # an empty whole-DAG submission is registration-shaped: it ages
+        # out under the TTL like a bare registration (re-submission with
+        # tasks, or any later task submit, lifts it out)
+        self._empty_regs.pop(dag.workflow_id, None)
+        if not dag.tasks:
+            self._empty_regs[dag.workflow_id] = now
         self.provenance.register_workflow(dag.workflow_id, {"name": dag.name})
         for t in dag.tasks.values():
             t.submit_time = now
@@ -482,6 +564,7 @@ class CommonWorkflowScheduler:
             raise ValueError(f"share must be finite and >= 0, got {share!r}")
         self.workflow_shares[workflow_id] = share
         self._mark_dirty(workflow_id)
+        self._arm_preemption()                 # shares moved under running work
         return share
 
     def set_arbiter(self, arbiter: str | Arbiter) -> Arbiter:
@@ -489,7 +572,91 @@ class CommonWorkflowScheduler:
         self.arbiter = (
             make_arbiter(arbiter) if isinstance(arbiter, str) else arbiter
         )
+        self._arm_preemption()                 # the fairness regime changed
         return self.arbiter
+
+    def set_workflow_quota(self, workflow_id: str,
+                           max_running: Optional[int] = None,
+                           max_queued: Optional[int] = None) -> WorkflowQuota:
+        """Set a tenant's queue quota (CWSI: PUT .../quota).
+
+        Each bound is a non-negative integer or ``None`` (unlimited); as
+        with shares there is no coercion — a float (NaN and inf
+        included), bool, or string is a client bug the wire contract
+        surfaces as 400, mutating nothing. Both bounds ``None`` clears
+        the quota. ``max_running`` caps concurrently allocated launches
+        (enforced at emission and at launch); ``max_queued`` caps queued
+        tasks (enforced at submission — the CWSI answers 429). Quotas
+        retire with the workflow; re-declare before rerunning the id."""
+        def check(name: str, value: Optional[int]) -> Optional[int]:
+            if value is None:
+                return None
+            if isinstance(value, bool) or not isinstance(value, int):
+                raise ValueError(
+                    f"{name} must be a non-negative integer or null, "
+                    f"got {value!r}")
+            if value < 0:
+                raise ValueError(f"{name} must be >= 0, got {value!r}")
+            return value
+
+        quota = WorkflowQuota(max_running=check("maxRunning", max_running),
+                              max_queued=check("maxQueued", max_queued))
+        if quota.max_running is None and quota.max_queued is None:
+            self.workflow_quotas.pop(workflow_id, None)
+        else:
+            self.workflow_quotas[workflow_id] = quota
+        self._mark_dirty(workflow_id)
+        return quota
+
+    def _running_count(self, workflow_id: str) -> int:
+        """Live allocation count of one workflow, O(1) on the live path
+        (the incremental usage map's key set IS the allocation set,
+        restricted per workflow)."""
+        if not self.legacy_scan:
+            return len(self._usage_costs.get(workflow_id, ()))
+        return sum(1 for a in self.allocations.values()
+                   if a.workflow_id == workflow_id)
+
+    def _queued_count(self, dag: Optional[WorkflowDAG]) -> int:
+        """Queued = non-terminal DAG tasks minus running DAG launches.
+
+        ``_running_count`` deliberately includes speculative copies (they
+        hold real resources, so they count against ``max_running``), but
+        a copy is not a DAG task: leaving it in here would undercount
+        the queue by one per live copy and under-enforce ``max_queued``.
+        """
+        if dag is None:
+            return 0
+        wid = dag.workflow_id
+        running = self._running_count(wid)
+        if running and self.spec_copies:
+            running -= sum(
+                1 for copy in self.spec_copies.values()
+                if copy.spec.workflow_id == wid
+                and copy.task_id in self.allocations)
+        return max(dag._n_unterminated - max(running, 0), 0)
+
+    def _check_queued_quota(self, workflow_id: str,
+                            dag: Optional[WorkflowDAG], adding: int) -> None:
+        quota = self.workflow_quotas.get(workflow_id)
+        if quota is None or quota.max_queued is None:
+            return
+        if self._queued_count(dag) + adding > quota.max_queued:
+            raise QuotaExceededError(
+                f"workflow {workflow_id!r} is at its max_queued quota "
+                f"({quota.max_queued}); retry after queued tasks drain")
+
+    def _arm_preemption(self) -> None:
+        """A preemption trigger fired (share/arbiter change, new tenant).
+
+        Only arms when preemption is enabled, so the default engine
+        carries zero extra state through these events; the armed pass
+        runs as part of the next scheduling round (the flag also marks
+        the engine pending so a lone share change still gets a round)."""
+        if self.max_preemptions_per_round > 0:
+            self._preempt_pending = True
+            self._sched_pending = True
+            self.preempt_triggers += 1
 
     def _invalidate_totals(self) -> None:
         """Node membership/up-state changed: totals and every allocation's
@@ -582,7 +749,10 @@ class CommonWorkflowScheduler:
         self._usage_dirty.clear()
         return dict(self._usage_cache)
 
-    def _arbiter_context(self, ctx: SchedulingContext) -> ArbiterContext:
+    def _arbiter_context(
+        self, ctx: SchedulingContext,
+        ready_counts: Optional[Dict[str, int]] = None,
+    ) -> ArbiterContext:
         return ArbiterContext(
             ctx=ctx,
             strategy_for=self._strategy_for,
@@ -594,7 +764,19 @@ class CommonWorkflowScheduler:
             keyed_queue_fn=(
                 None if self.legacy_scan
                 else lambda wid, tasks: self._keyed_queue(wid, tasks, ctx)),
+            quotas=self.workflow_quotas,
+            running_count_fn=self._running_count,
+            ready_counts=ready_counts or {},
+            preempt_debt=self._preempt_debt_sums(),
+            max_preemptions=self.max_preemptions_per_round,
         )
+
+    def _preempt_debt_sums(self) -> Dict[str, float]:
+        """Per-workflow outstanding preemption debt (usually empty)."""
+        if not self._preempt_debt:
+            return {}
+        return {wid: sum(entries.values())
+                for wid, entries in self._preempt_debt.items()}
 
     def _keyed_queue(
         self, wid: str, tasks: List[Task], ctx: SchedulingContext
@@ -630,15 +812,30 @@ class CommonWorkflowScheduler:
         """Status document for the CWSI ``GET /arbiter`` endpoint."""
         usage = self._workflow_usage(self._cluster_totals())
         active = [wid for wid, dag in self.dags.items() if not dag.finished()]
+        debt = self._preempt_debt_sums()
+        # deficits charge preempted-but-not-relaunched work to its victim
+        # (the anti-oscillation accounting the arbiter itself orders by);
+        # without preemptions this IS the plain running-usage deficit
+        charged = ({wid: usage.get(wid, 0.0) + debt.get(wid, 0.0)
+                    for wid in set(usage) | set(debt)} if debt else usage)
         return {
             "arbiter": self.arbiter.name,
             "shares": dict(self.workflow_shares),
             "usage": usage,
-            "deficits": _share_deficits(self.workflow_shares, usage, active),
+            "deficits": _share_deficits(self.workflow_shares, charged,
+                                        active),
             "arbiterRounds": self.arbiter_rounds,
             "placementProbes": self.placement_probes,
             "feasibilityChecks": self.feasibility_checks,
             "infeasibleBuckets": len(self._infeasible),
+            "quotas": {
+                wid: {"maxRunning": q.max_running, "maxQueued": q.max_queued}
+                for wid, q in self.workflow_quotas.items()
+            },
+            "preemptions": self.preemptions,
+            "preemptRounds": self.preempt_rounds,
+            "maxPreemptionsPerRound": self.max_preemptions_per_round,
+            "preemptDebt": debt,
             "workflows": {
                 wid: dag.state_counts() for wid, dag in self.dags.items()
             },
@@ -761,6 +958,9 @@ class CommonWorkflowScheduler:
         # CWSI before resubmitting (shares may be set pre-registration).
         self.workflow_strategies.pop(wid, None)
         self.workflow_shares.pop(wid, None)
+        self.workflow_quotas.pop(wid, None)
+        self._preempt_debt.pop(wid, None)
+        self._empty_regs.pop(wid, None)
         self._retired_readiness_ops += dag.readiness_ops
         self._retired_rank_ops += dag.rank_ops
         self._retired.pop(wid, None)               # refresh recency on re-run
@@ -807,13 +1007,26 @@ class CommonWorkflowScheduler:
             # the task and release the live launch's allocation — the
             # protocol hole flagged in the CWSI rev, closed by the id
             return
-        if task_id not in self.spec_copies and task.state.terminal:
-            # duplicate/late completion report (e.g. a kill racing a real
-            # resource manager's finish): the task is settled. The old
-            # full-scan engine re-derived readiness from parent states so
-            # this was harmless; the counter-based path must not let it
-            # double-decrement children's unmet counts.
-            return
+        if task_id not in self.spec_copies:
+            if task.state.terminal:
+                # duplicate/late completion report (e.g. a kill racing a
+                # real resource manager's finish): the task is settled.
+                # The old full-scan engine re-derived readiness from
+                # parent states so this was harmless; the counter-based
+                # path must not let it double-decrement children's unmet
+                # counts.
+                return
+            if not task.state.active:
+                # requeue-window guard (the requeue-path audit): a task
+                # sitting PENDING/READY has NO live launch — it was
+                # requeued by node loss, a retried failure, or a
+                # preemption, and its old launch is dead by engine
+                # action. Any report here is that dead launch's late
+                # echo; before this guard, a *lenient* (id-less) adapter
+                # could settle the requeued task with it — crediting
+                # outputs of a launch whose node may be gone — while
+                # id-carrying adapters were already protected above.
+                return
         task.end_time = now
         self._release(task_id)
 
@@ -851,11 +1064,15 @@ class CommonWorkflowScheduler:
         """
         self._sched_pending = False
         self.sched_rounds += 1
-        ready: List[Task] = []
-        if self.legacy_scan:
-            for dag in self.dags.values():
-                ready.extend(dag.ready_tasks(now))
-        else:
+        if self._empty_regs:
+            self._reap_registrations(now)
+
+        def collect_ready() -> List[Task]:
+            if self.legacy_scan:
+                out: List[Task] = []
+                for dag in self.dags.values():
+                    out.extend(dag.ready_tasks(now))
+                return out
             if self._queue_dirty:
                 for wid in self._dirty_dags:
                     dag = self.dags.get(wid)
@@ -865,16 +1082,33 @@ class CommonWorkflowScheduler:
                         self._ready_add(task)
                 self._dirty_dags.clear()
                 self._queue_dirty = False
-            ready = list(self._ready.values())
+            return list(self._ready.values())
+
+        ready = collect_ready()
         if not ready:
             return 0
         ctx = self._context(now)
+        # armed preemption pass (share/arbiter change or tenant arrival
+        # since the last round, and only with max_preemptions_per_round
+        # > 0): victims are killed, released through the usage-delta
+        # path, and requeued *into this round's ready set* — the freed
+        # capacity and the requeued work are arbitrated together below
+        if self._preempt_pending and self.max_preemptions_per_round > 0:
+            self._preempt_pending = False
+            if self._run_preemption(ready, now, ctx):
+                ready = collect_ready()
         # the arbiter interleaves per-workflow priority lists; the default
         # FirstAppearanceArbiter reproduces the pre-arbitration order
         # bit-identically (golden-trace suite pins this)
         self.arbiter_rounds += 1
         ordered = self.arbiter.order(ready, self._arbiter_context(ctx))
         launched = 0
+        # per-round max_running guard (covers every arbiter; the fair-
+        # share heap additionally stops emitting capped workflows): counts
+        # are seeded lazily from the O(1) live-allocation view and
+        # advanced per launch
+        quotas = self.workflow_quotas
+        quota_running: Dict[str, int] = {}
         idx = self._node_index         # None under legacy_scan
         # node views are LAZY: the live path materialises a full snapshot
         # only when an oracle (non-place_key) placement needs one, then
@@ -909,6 +1143,16 @@ class CommonWorkflowScheduler:
                     feasible = set()
                 if not views:
                     break
+            if quotas:
+                wid = task.spec.workflow_id
+                quota = quotas.get(wid)
+                if quota is not None and quota.max_running is not None:
+                    used = quota_running.get(wid)
+                    if used is None:
+                        used = self._running_count(wid)
+                        quota_running[wid] = used
+                    if used >= quota.max_running:
+                        continue
             mem_alloc = self._memory_for(task, mem_cap)
             res = task.spec.resources
             if not self.legacy_scan:
@@ -950,6 +1194,8 @@ class CommonWorkflowScheduler:
             if node is None:
                 continue
             self._launch(task, node, mem_alloc, now)
+            if quotas and task.spec.workflow_id in quota_running:
+                quota_running[task.spec.workflow_id] += 1
             if self.legacy_scan:
                 views = None
             else:
@@ -1040,6 +1286,10 @@ class CommonWorkflowScheduler:
                            cpus, mem_alloc, res.chips)
         self.mem_allocated[task.task_id] = mem_alloc
         self._ready_discard(task.task_id, task.spec.workflow_id)
+        if self._preempt_debt:
+            # the preempted work is running again: the real allocation
+            # carries the charge from here (debt would double-count it)
+            self._clear_preempt_debt(task.spec.workflow_id, task.task_id)
         task.launch_id = next(self._launch_seq)
         task.state = TaskState.SCHEDULED
         task.node = node
@@ -1063,6 +1313,142 @@ class CommonWorkflowScheduler:
                 self._node_index.touch(alloc.node)   # no-op if node is down
         # capacity grew: previously-infeasible demand buckets may now fit
         self._capacity_version += 1
+
+    # ------------------------------------------------------------------
+    # preemptive arbitration
+    # ------------------------------------------------------------------
+    def _run_preemption(self, ready: List[Task], now: float,
+                        ctx: SchedulingContext) -> int:
+        """One armed preemption pass: consult the arbiter, apply victims.
+
+        Candidates are live launches of real DAG tasks; speculative
+        copies and their originals are excluded (that pair's lifecycle —
+        first finisher wins, loser is killed — belongs to the speculation
+        module, and preempting half of it would leave a phantom race).
+        Returns the number of launches killed and requeued."""
+        candidates: List[PreemptionCandidate] = []
+        totals = self._cluster_totals()
+        for tid, alloc in self.allocations.items():
+            if tid in self.spec_copies or tid in self.spec_of_original:
+                continue
+            dag = self.dags.get(alloc.workflow_id)
+            task = dag.tasks.get(tid) if dag is not None else None
+            if task is None or not task.state.active:
+                continue
+            candidates.append(PreemptionCandidate(
+                task=task,
+                workflow_id=alloc.workflow_id,
+                cost=dominant_cost(alloc.cpus, alloc.mem, alloc.chips,
+                                   totals),
+                progress=(now - task.start_time
+                          if task.state == TaskState.RUNNING else 0.0),
+            ))
+        if not candidates:
+            return 0
+        # the beneficiary backlog is the ready work that CANNOT be placed
+        # in current free capacity: a task that fits will launch this
+        # very round without anyone dying for it, so killing on its
+        # behalf would be pure churn (victim requeued and relaunched at
+        # the same instant). One watermark probe per ready task, only on
+        # armed passes.
+        ready_counts: Dict[str, int] = {}
+        idx = self._node_index
+        for task in ready:
+            res = task.spec.resources
+            mem_alloc = self._memory_for(task)
+            if idx is not None:
+                fits = idx.exists_fit(res.cpus, mem_alloc, res.chips)
+            else:
+                fits = any(
+                    st.up and _fits_demand(st.cpus_free, st.mem_free,
+                                           st.chips_free, res.cpus,
+                                           mem_alloc, res.chips)
+                    for st in self.nodes.values())
+            if not fits:
+                wid = task.spec.workflow_id
+                ready_counts[wid] = ready_counts.get(wid, 0) + 1
+        if not ready_counts:
+            return 0
+        self.preempt_rounds += 1
+        actx = self._arbiter_context(ctx, ready_counts=ready_counts)
+        victims = self.arbiter.preempt(candidates, actx)
+        # belt and braces: the bound holds even for arbiters that ignore
+        # actx.max_preemptions
+        for victim in victims[: self.max_preemptions_per_round]:
+            self._preempt_launch(victim.task, victim.cost, now, ctx)
+        return min(len(victims), self.max_preemptions_per_round)
+
+    def _preempt_launch(self, task: Task, cost: float, now: float,
+                        ctx: SchedulingContext) -> None:
+        """Kill one victim launch and requeue its task.
+
+        The allocation is released through the incremental usage-delta
+        path (conservation: exactly the killed launch's demands come
+        back), the lost work is charged to the victim workflow's
+        preemption debt, and the launch id is burned so the dead
+        launch's late start/finish reports are rejected like any other
+        dead launch — id-carrying and lenient adapters alike (a requeued
+        READY task has no live launch to report on)."""
+        tid, wid = task.task_id, task.spec.workflow_id
+        self._release(tid)
+        self.adapter.kill(tid)
+        task.end_time = now
+        self._record(task, "PREEMPTED",
+                     TaskResult(False, reason="preempted by arbiter"))
+        self._preempt_debt.setdefault(wid, {})[tid] = cost
+        task.state = TaskState.READY
+        task.node = None
+        # burn a fresh launch id NOW (as the failure/node-loss requeues
+        # do): the dead launch's reports are rejected in the requeue →
+        # relaunch window too
+        task.launch_id = next(self._launch_seq)
+        self._ready_add(task)
+        self.preemptions += 1
+        # requeue does not consume a retry: preemption is the engine's
+        # doing, not the task's failure (attempt stays, so the memory-
+        # doubling rule and max_retries are unaffected)
+        self._strategy_for(task).on_task_preempted(task, ctx)
+
+    def _clear_preempt_debt(self, wid: str, tid: str) -> None:
+        entries = self._preempt_debt.get(wid)
+        if entries is not None and entries.pop(tid, None) is not None:
+            if not entries:
+                del self._preempt_debt[wid]
+
+    # ------------------------------------------------------------------
+    # registration TTL
+    # ------------------------------------------------------------------
+    def _reap_registrations(self, now: float) -> int:
+        """Reap workflows registered but never given tasks (ROADMAP
+        "Future work" leak): completion-driven retirement cannot see
+        them, so without a TTL one empty DAG leaks per abandoned
+        registration. ``_empty_regs`` is insertion-ordered by
+        registration time, so the scan stops at the first entry still
+        inside the TTL — reaping is O(reaped), not O(registered).
+        Tenant policy (shares, quotas, strategy overrides) reaps with
+        the registration, exactly as retirement drops it: re-declare
+        before re-registering the id."""
+        ttl = self.registration_ttl
+        if ttl is None or not self._empty_regs:
+            return 0
+        reaped = 0
+        while self._empty_regs:
+            wid = next(iter(self._empty_regs))
+            if now - self._empty_regs[wid] < ttl:
+                break
+            del self._empty_regs[wid]
+            dag = self.dags.get(wid)
+            if dag is not None and not dag.tasks:
+                del self.dags[wid]
+                self._dirty_dags.pop(wid, None)
+                self._evict_workflow_caches(wid)
+                self.workflow_strategies.pop(wid, None)
+                self.workflow_shares.pop(wid, None)
+                self.workflow_quotas.pop(wid, None)
+                self._preempt_debt.pop(wid, None)
+                reaped += 1
+        self.reaped_registrations += reaped
+        return reaped
 
     # ------------------------------------------------------------------
     # completion paths
@@ -1094,6 +1480,9 @@ class CommonWorkflowScheduler:
         # requeued original still sits READY and unplaced — drop it from
         # the queue or it would be launched again after succeeding
         self._ready_discard(task.task_id, task.spec.workflow_id)
+        if self._preempt_debt:
+            # settled without a relaunch (e.g. a copy's win): drop debt
+            self._clear_preempt_debt(task.spec.workflow_id, task.task_id)
         self._record(task, "SUCCEEDED", result)
         self.mem_allocated.pop(task.task_id, None)
         # outputs become resident on the executing node (data locality)
@@ -1154,6 +1543,8 @@ class CommonWorkflowScheduler:
             task.failure_reason = result.reason
             self.mem_allocated.pop(task.task_id, None)
             self._ready_discard(task.task_id, task.spec.workflow_id)
+            if self._preempt_debt:
+                self._clear_preempt_debt(task.spec.workflow_id, task.task_id)
             log.warning("task %s permanently failed: %s", task.task_id, result.reason)
             dag = self.dags[task.spec.workflow_id]
             dag.on_task_error(task.task_id)
@@ -1195,6 +1586,13 @@ class CommonWorkflowScheduler:
             threshold = max(self.speculation_min_runtime,
                             self.speculation_factor * (rt + std))
             if elapsed < threshold:
+                continue
+            quota = self.workflow_quotas.get(task.spec.workflow_id)
+            if (quota is not None and quota.max_running is not None
+                    and self._running_count(task.spec.workflow_id)
+                    >= quota.max_running):
+                # a backup copy is a second live allocation for the same
+                # tenant: it honours max_running like any launch
                 continue
             copy_id = fresh_task_id(f"spec-{task.task_id}")
             copy_spec = replace(task.spec, task_id=copy_id)
@@ -1271,6 +1669,13 @@ class CommonWorkflowScheduler:
             },
             "arbiter": self.arbiter.name,
             "workflow_shares": dict(self.workflow_shares),
+            "workflow_quotas": {
+                wid: {"maxRunning": q.max_running, "maxQueued": q.max_queued}
+                for wid, q in self.workflow_quotas.items()
+            },
+            "preemptions": self.preemptions,
+            "max_preemptions_per_round": self.max_preemptions_per_round,
+            "reaped_registrations": self.reaped_registrations,
             "nodes": {n: s.up for n, s in self.nodes.items()},
             "workflows": {w: d.finished() for w, d in self.dags.items()},
             "running": len(self.allocations),
@@ -1308,4 +1713,8 @@ class CommonWorkflowScheduler:
                               if self._node_index is not None else 0),
             "priority_sorts": self.priority_sorts,
             "priority_cache_hits": self.priority_cache_hits,
+            "preemptions": self.preemptions,
+            "preempt_rounds": self.preempt_rounds,
+            "preempt_triggers": self.preempt_triggers,
+            "reaped_registrations": self.reaped_registrations,
         }

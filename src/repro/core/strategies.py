@@ -175,6 +175,17 @@ class Strategy(ABC):
     def on_task_finished(self, task: Task, ctx: SchedulingContext) -> None:
         pass
 
+    # hook for strategies that cache placement/ordering state keyed to a
+    # task's *launch* — called when the engine preempts (kills + requeues)
+    # a running launch under preemptive arbitration. The built-ins need
+    # no action: rank/HEFT memos key on DAG/predictor versions (the DAG
+    # is unchanged by a requeue) and the engine's cached priority queues
+    # are invalidated by the requeue's ready-membership bump; out-of-tree
+    # strategies tracking in-flight launches override this to stay
+    # coherent.
+    def on_task_preempted(self, task: Task, ctx: SchedulingContext) -> None:
+        pass
+
     # hook for strategies that cache per-workflow state (e.g. HEFT's rank
     # memo): called when a workflow completes or is replaced, so caches do
     # not accumulate one entry per workflow ever scheduled

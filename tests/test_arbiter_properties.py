@@ -11,7 +11,15 @@ drawn ready sets, shares, and usage vectors:
     tasks appears within the first ``(W / min_share_fraction) + W`` slots,
     and eventually in full,
   * **share conservation**: fair-share deficits sum to ~0 for any share /
-    usage combination.
+    usage combination,
+  * **preemption off ≡ current fair_share**: with
+    ``max_preemptions_per_round=0`` (the default) the engine never
+    consults ``preempt()`` and its (task, node, start) traces are
+    bit-identical across strategies × node churn × mid-run share flips,
+  * **no preemption livelock**: per-task preemptions are bounded by the
+    consulted preemption passes, which are bounded by the triggers,
+  * **preemption conservation**: every killed launch's allocation is
+    released in full (the cluster drains back to registered capacity).
 """
 import numpy as np
 import pytest
@@ -22,8 +30,11 @@ pytest.importorskip(
 )
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
+from repro.cluster import ClusterSimulator, SimConfig  # noqa: E402
+from repro.cluster.nodes import cpu_node  # noqa: E402
 from repro.core import (
     ArbiterContext,
+    CommonWorkflowScheduler,
     DataRef,
     FirstAppearanceArbiter,
     ProvenanceStore,
@@ -129,6 +140,115 @@ def test_fair_share_never_starves_nonzero_shares(data):
     for wid, n in backlog.items():
         if float(shares.get(wid, 1.0)) > 0.0:
             assert wid in prefix_ids or n == 0, (wid, slack)
+
+
+# ---------------------------------------------------------------------------
+# preemptive arbitration properties (end-to-end through the simulator)
+# ---------------------------------------------------------------------------
+def _preemption_run(strategy, seed, knob, churn, flips, arbiter=None):
+    """One seeded multi-tenant run with optional node churn and mid-run
+    share flips; returns ((task, node, start) trace, engine)."""
+    nodes = [cpu_node(f"n{i}", cpus=4.0, mem_gib=32) for i in range(3)]
+    sim = ClusterSimulator(nodes, SimConfig(seed=seed,
+                                            runtime_noise_sigma=0.0))
+    cws = CommonWorkflowScheduler(
+        adapter=sim, strategy=strategy,
+        arbiter=arbiter if arbiter is not None else "fair_share",
+        max_preemptions_per_round=knob)
+    cws.set_workflow_share("a", 4.0)
+    cws.set_workflow_share("b", 1.0)
+    sim.attach(cws)
+    dags = []
+    for wid in ("a", "b"):
+        dag = WorkflowDAG(wid)
+        prev = []
+        for s in range(3):
+            cur = []
+            for i in range(6):
+                tid = f"{wid}.s{s}.t{i}"
+                dag.add_task(TaskSpec(task_id=tid, name=f"k{s}",
+                                      inputs=(DataRef(f"d{tid}", GiB),),
+                                      resources=Resources(cpus=1.0,
+                                                          mem_bytes=GiB),
+                                      base_runtime_s=10.0),
+                             deps=(prev[i],) if prev else ())
+                cur.append(tid)
+            prev = cur
+        dags.append(dag)
+        sim.submit_workflow_at(0.0, dag)
+    if churn:
+        sim.fail_node_at(12.0, "n2")
+        sim.join_node_at(31.0, cpu_node("n3", cpus=4.0, mem_gib=32))
+    for t, (wa, wb) in flips:
+        sim.call_at(t, lambda now, wa=wa, wb=wb: (
+            cws.set_workflow_share("a", wa),
+            cws.set_workflow_share("b", wb)))
+    sim.run()
+    assert all(d.succeeded() for d in dags)
+    trace = sorted((t.task_id, t.node, round(t.start_time, 9))
+                   for d in dags for t in d.tasks.values())
+    return trace, cws
+
+
+class _TripwireFairShare(WeightedFairShareArbiter):
+    def preempt(self, running, actx):
+        raise AssertionError("preempt() consulted while disabled")
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    strategy=st.sampled_from(["fifo_rr", "rank_min_rr", "original",
+                              "bestfit"]),
+    seed=st.integers(0, 2 ** 16),
+    churn=st.booleans(),
+    flip=st.booleans(),
+)
+def test_preemption_off_is_bit_identical_to_current_fair_share(
+        strategy, seed, churn, flip):
+    """``max_preemptions_per_round=0`` ≡ the current fair_share engine:
+    same traces bit for bit, and preempt() is provably never consulted —
+    across strategies, node churn, and mid-run share flips."""
+    flips = [(18.0, (0.5, 8.0))] if flip else []
+    base, cws = _preemption_run(strategy, seed, knob=0, churn=churn,
+                                flips=flips)
+    guarded, cws2 = _preemption_run(strategy, seed, knob=0, churn=churn,
+                                    flips=flips,
+                                    arbiter=_TripwireFairShare())
+    assert base == guarded
+    assert cws.preemptions == 0 and cws.preempt_rounds == 0
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(0, 2 ** 16),
+    knob=st.integers(1, 4),
+    n_flips=st.integers(1, 3),
+    churn=st.booleans(),
+)
+def test_preemption_is_bounded_and_conserves_allocations(
+        seed, knob, n_flips, churn):
+    """No livelock: per-task preemptions ≤ consulted passes ≤ triggers.
+    Conservation: killed launches release exactly what they held — after
+    the run every node is back at registered capacity and no allocation
+    or debt is left behind."""
+    rng = np.random.default_rng(seed)
+    flips = [(float(10 + 15 * i), ((0.5, 8.0) if i % 2 == 0 else (8.0, 0.5)))
+             for i in range(n_flips)]
+    trace, cws = _preemption_run("fifo_rr", seed, knob=knob, churn=churn,
+                                 flips=flips)
+    counts = {}
+    for tr in cws.provenance.task_traces:
+        if tr.state == "PREEMPTED":
+            counts[tr.task_id] = counts.get(tr.task_id, 0) + 1
+    assert sum(counts.values()) == cws.preemptions
+    assert cws.preempt_rounds <= cws.preempt_triggers
+    assert max(counts.values(), default=0) <= cws.preempt_rounds
+    assert cws.preemptions <= knob * cws.preempt_rounds
+    assert cws.allocations == {} and cws._preempt_debt == {}
+    for st_ in cws.nodes.values():
+        assert st_.cpus_free == st_.info.cpus
+        assert st_.mem_free == st_.info.mem_bytes
+        assert st_.chips_free == st_.info.chips
 
 
 @settings(max_examples=50, deadline=None)

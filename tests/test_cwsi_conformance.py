@@ -68,6 +68,8 @@ def _snapshot(cws):
          for wid, dag in cws.dags.items()},
         {w: s.name for w, s in cws.workflow_strategies.items()},
         dict(cws.workflow_shares),
+        dict(cws.workflow_quotas),
+        cws.preemptions,
         cws.arbiter.name,
         cws.strategy.name,
         sorted(cws._ready),
@@ -87,6 +89,8 @@ ENDPOINTS = [
     ("GET", "/v1/workflow/{wid}/state", None, 200),
     ("PUT", "/v1/workflow/{wid}/strategy", {"strategy": "fifo_rr"}, 200),
     ("PUT", "/v1/workflow/{wid}/share", {"share": 2.5}, 200),
+    ("PUT", "/v1/workflow/{wid}/quota",
+     {"maxRunning": 4, "maxQueued": 64}, 200),
     ("POST", "/v1/schedule", None, 200),
     ("GET", "/v1/arbiter", None, 200),
     ("PUT", "/v1/arbiter", {"arbiter": "fair_share"}, 200),
@@ -164,6 +168,7 @@ BAD_PATHS = [
     ("GET", "/v1/stats/extra", 404),
     ("GET", "/v1/stat", 404),
     ("PUT", "/v1/workflow/w0/share/extra", 404),
+    ("PUT", "/v1/workflow/w0/quota/extra", 404),
     ("PUT", "/v1/workflow/w0/nosuch", 404),
 ]
 
@@ -200,6 +205,26 @@ BAD_BODIES = [
     ("PUT", "/v1/workflow/w0/share", {"share": "2.5"}, 400),  # no coercion
     ("PUT", "/v1/workflow/w0/share", {"share": True}, 400),
     ("PUT", "/v1/workflow/w0/share", {"share": None}, 400),
+    # non-finite floats would poison the deficit-heap ordering (NaN
+    # breaks comparability): both tenant-policy endpoints must 400 them
+    # without mutating state. json.dumps/loads round-trip the NaN/inf
+    # literals, so these exercise the real wire path.
+    ("PUT", "/v1/workflow/w0/share", {"share": float("nan")}, 400),
+    ("PUT", "/v1/workflow/w0/share", {"share": float("inf")}, 400),
+    ("PUT", "/v1/workflow/w0/share", {"share": float("-inf")}, 400),
+    ("PUT", "/v1/workflow/w0/quota", None, 400),
+    ("PUT", "/v1/workflow/w0/quota", {}, 400),
+    ("PUT", "/v1/workflow/w0/quota", {"maxRunning": float("nan")}, 400),
+    ("PUT", "/v1/workflow/w0/quota", {"maxRunning": float("inf")}, 400),
+    ("PUT", "/v1/workflow/w0/quota", {"maxQueued": float("nan")}, 400),
+    ("PUT", "/v1/workflow/w0/quota", {"maxQueued": float("-inf")}, 400),
+    ("PUT", "/v1/workflow/w0/quota", {"maxRunning": -1}, 400),
+    ("PUT", "/v1/workflow/w0/quota", {"maxRunning": 2.5}, 400),
+    ("PUT", "/v1/workflow/w0/quota", {"maxRunning": "4"}, 400),
+    ("PUT", "/v1/workflow/w0/quota", {"maxQueued": True}, 400),
+    ("PUT", "/v1/workflow/w0/quota", {"nosuch": 1}, 400),
+    ("PUT", "/v1/workflow/w0/quota", "quota", 400),
+    ("PUT", "/v1/workflow/w0/quota", [1], 400),
     ("PUT", "/v1/arbiter", None, 400),
     ("PUT", "/v1/arbiter", {"arbiter": "nope"}, 400),
     ("PUT", "/v1/arbiter", {"arbiter": 7}, 400),
@@ -346,6 +371,32 @@ def test_retired_workflow_still_answers_state_queries(rig):
     assert _snapshot(cws) == before
     # stats surface the tombstone count
     assert _req(server, "GET", "/v1/stats")["body"]["retired"] >= 1
+
+
+def test_max_queued_rejection_is_429_and_mutates_nothing(rig):
+    """A well-formed submit rejected by quota is policy (429), not a
+    malformed request (400) — and it must be atomic like any error."""
+    sim, cws, server = rig
+    _req(server, "POST", "/v1/workflow/w0", {"name": "w0"})
+    out = _req(server, "PUT", "/v1/workflow/w0/quota", {"maxQueued": 1})
+    assert out["status"] == 200
+    assert out["body"] == {"workflowId": "w0", "maxRunning": None,
+                           "maxQueued": 1}
+    assert _req(server, "POST", "/v1/workflow/w0/task",
+                _task_body("w0.t0"))["status"] == 200
+    before = _snapshot(cws)
+    out = _req(server, "POST", "/v1/workflow/w0/task", _task_body("w0.t1"))
+    assert out["status"] == 429
+    assert "error" in out["body"]
+    assert _snapshot(cws) == before
+    assert "w0.t1" not in cws.dags["w0"]
+    # clearing the quota (both bounds null) frees the tenant again
+    out = _req(server, "PUT", "/v1/workflow/w0/quota",
+               {"maxRunning": None, "maxQueued": None})
+    assert out["status"] == 200
+    assert cws.workflow_quotas == {}
+    assert _req(server, "POST", "/v1/workflow/w0/task",
+                _task_body("w0.t1"))["status"] == 200
 
 
 def test_share_and_arbiter_roundtrip(rig):

@@ -367,6 +367,81 @@ def test_late_success_from_dead_launch_is_rejected():
     assert cws.allocations == {}
 
 
+def _requeue_by_node_loss(cws, dag):
+    first_node = cws.allocations["w.t0"].node
+    cws.remove_node(first_node, now=2.0)
+
+
+def _requeue_by_failure(cws, dag):
+    cws.on_task_finished("w.t0", 2.0, TaskResult(False, reason="crash"),
+                         launch_id=dag.task("w.t0").launch_id)
+
+
+def _requeue_by_preemption(cws, dag):
+    # tenant v arrives with a huge share: the armed pass evicts w.t0
+    cws.set_workflow_share("v", 100.0)
+    vdag = WorkflowDAG("v")
+    vdag.add_task(TaskSpec(task_id="v.t0", name="p",
+                           resources=Resources(cpus=4.0, mem_bytes=GiB)))
+    cws.submit_workflow(vdag, now=2.0)
+    assert cws.preemptions == 1
+
+
+@pytest.mark.parametrize("requeue", [_requeue_by_node_loss,
+                                     _requeue_by_failure,
+                                     _requeue_by_preemption],
+                         ids=["node_loss", "failure", "preemption"])
+def test_requeue_window_rejects_stale_lenient_reports(requeue):
+    """The requeue-path audit: all three requeue producers (node loss,
+    retried failure, preemption) leave the task READY with its old launch
+    dead BY ENGINE ACTION. In that window a late report can only be the
+    dead launch's echo — so even a *lenient* (id-less) adapter's
+    on_task_started must not re-mark the task RUNNING, and its
+    on_task_finished must not settle the task (before this PR a lenient
+    late success would settle the requeued task, crediting outputs of a
+    launch whose node may be gone)."""
+    cws = CommonWorkflowScheduler(adapter=_NullAdapter(),
+                                  strategy="rank_min_rr",
+                                  arbiter="fair_share",
+                                  max_preemptions_per_round=2)
+    cws.add_node(NodeInfo("n0", cpus=4, mem_bytes=8 * GiB), now=0.0)
+    dag = WorkflowDAG("w")
+    dag.add_task(TaskSpec(task_id="w.t0", name="p", max_retries=3,
+                          resources=Resources(cpus=4.0, mem_bytes=GiB)))
+    cws.submit_workflow(dag, now=0.0)
+    task = dag.task("w.t0")
+    old_launch = task.launch_id
+    cws.on_task_started("w.t0", 1.0, launch_id=old_launch)
+    requeue(cws, dag)
+    assert task.state == TaskState.READY
+    assert task.launch_id != old_launch          # id burned at requeue
+    # --- the lenient (id-less) echoes of the dead launch ---
+    cws.on_task_started("w.t0", 2.1)
+    assert task.state == TaskState.READY         # not re-marked RUNNING
+    cws.on_task_finished("w.t0", 2.2, TaskResult(True))
+    assert task.state == TaskState.READY         # not settled
+    assert "w.t0" in cws._ready                  # still queued
+    assert not dag.finished()
+    # id-carrying echoes are rejected too, as before
+    cws.on_task_finished("w.t0", 2.3, TaskResult(True),
+                         launch_id=old_launch)
+    assert task.state == TaskState.READY
+
+
+def test_never_launched_task_cannot_be_finished():
+    """Degenerate corner of the same guard: a report for a task that was
+    never launched at all is rejected rather than settling it."""
+    cws = CommonWorkflowScheduler(adapter=_NullAdapter(),
+                                  strategy="rank_min_rr")
+    dag = WorkflowDAG("w")
+    dag.add_task(TaskSpec(task_id="w.t0", name="p",
+                          resources=Resources(cpus=1.0, mem_bytes=GiB)))
+    cws.submit_workflow(dag, now=0.0)            # no nodes: stays READY
+    cws.on_task_finished("w.t0", 1.0, TaskResult(True))
+    assert dag.task("w.t0").state == TaskState.READY
+    assert not dag.finished()
+
+
 def test_simulator_and_executor_report_launch_ids():
     """End-to-end through the simulator: every start/finish carries the
     launch id of the launch that produced it (node churn included)."""

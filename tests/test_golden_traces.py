@@ -42,12 +42,12 @@ def _trace(cws, dags):
 
 
 def _run_scenario(strategy, arbiter, shares, workflows, submit_times, seed,
-                  n_nodes=4):
+                  n_nodes=4, share_flips=(), **cws_kwargs):
     sim = ClusterSimulator(heterogeneous_cluster(n_nodes),
                            SimConfig(seed=seed))
     cws = CommonWorkflowScheduler(adapter=sim, strategy=strategy,
                                   predictor=LotaruPredictor(),
-                                  arbiter=arbiter)
+                                  arbiter=arbiter, **cws_kwargs)
     for wid, share in shares.items():
         cws.set_workflow_share(wid, share)
     sim.attach(cws)
@@ -56,6 +56,9 @@ def _run_scenario(strategy, arbiter, shares, workflows, submit_times, seed,
         dag = build_workflow(wf, seed=wf_seed, workflow_id=wid, n_samples=n)
         dags.append(dag)
         sim.submit_workflow_at(t, dag)
+    for t, wid, share in share_flips:
+        sim.call_at(t, lambda now, wid=wid, share=share:
+                    cws.set_workflow_share(wid, share))
     sim.run()
     assert all(d.succeeded() for d in dags)
     return _trace(cws, dags)
@@ -105,6 +108,42 @@ def test_arbiter_traces_are_golden(arbiter):
     trace = _run_scenario("rank_min_rr", arbiter, **_TENANT_SCENARIO)
     assert trace, "empty trace"
     _check(f"arbiter_{arbiter}", trace)
+
+
+# the preemptive scenario: tenant-b's share collapses and tenant-a's
+# jumps mid-run, while both are backlogged on the 2-node cluster — the
+# armed pass kills over-share work and the trace shows the reshuffle
+_PREEMPT_FLIPS = ((60.0, "tenant-a", 8.0), (60.0, "tenant-b", 0.5))
+
+
+def test_preemptive_fair_share_trace_is_golden():
+    trace = _run_scenario("rank_min_rr", "fair_share", **_TENANT_SCENARIO,
+                          share_flips=_PREEMPT_FLIPS,
+                          max_preemptions_per_round=2)
+    assert trace, "empty trace"
+    _check("arbiter_fair_share_preemptive", trace)
+
+
+def test_preemption_disabled_engine_matches_fair_share_golden():
+    """The preemptive engine with its knob at 0 must reproduce the
+    EXISTING fair_share snapshot — the preemption machinery is provably
+    free when disabled (the golden file is not regenerated for this)."""
+    trace = _run_scenario("rank_min_rr", "fair_share", **_TENANT_SCENARIO,
+                          max_preemptions_per_round=0)
+    _check("arbiter_fair_share", trace)
+
+
+def test_preemption_actually_changes_the_flip_schedule():
+    """Sanity for the new snapshot: with the same mid-run share flips,
+    the preemptive engine's schedule must differ from the knob-0 one (if
+    it did not, the snapshot would pin nothing new)."""
+    flipped = {
+        knob: _run_scenario("rank_min_rr", "fair_share",
+                            **_TENANT_SCENARIO, share_flips=_PREEMPT_FLIPS,
+                            max_preemptions_per_round=knob)
+        for knob in (0, 2)
+    }
+    assert flipped[2] != flipped[0]
 
 
 def test_arbiters_actually_differ():

@@ -374,6 +374,10 @@ def test_heft_memo_survives_workflow_replacement():
     new.add_dep("w.new0", "w.new1")
     cws.submit_workflow(new, now=2.0)       # must not KeyError on w.new*
     cws.on_task_finished("w.new0", now=3.0, result=TaskResult(True))
+    # drain the deferred round so w.new1 actually launches: a report for
+    # a never-launched task is rejected outright now (requeue-window
+    # guard), it no longer settles the task leniently
+    cws.schedule_pending(now=3.0)
     cws.on_task_finished("w.new1", now=4.0, result=TaskResult(True))
     assert new.succeeded()
 

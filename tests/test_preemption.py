@@ -1,0 +1,670 @@
+"""Preemptive arbitration, per-tenant queue quotas, registration TTL.
+
+The tentpole invariants of the preemption PR:
+
+  * a mid-run share flip under preemptive fair_share kills-and-requeues
+    over-share launches; the freed capacity goes to the under-share
+    tenant and the victim's lost work is charged as preemption debt,
+  * ``max_preemptions_per_round=0`` (the default) never consults
+    ``Arbiter.preempt`` and is bit-identical to the non-preemptive
+    engine (also pinned by the golden suite and the bench flag),
+  * no livelock: per-task preemptions are bounded by the number of
+    triggers (share/arbiter changes, tenant arrivals) — with no trigger
+    there is no preemption,
+  * conservation: every killed launch's allocation is released in full
+    (nodes drain back to their registered capacity),
+  * quotas: ``max_running`` caps concurrent launches at emission and at
+    launch; ``max_queued`` rejects submits (CWSI 429) atomically,
+  * registration TTL: workflows registered but never given tasks are
+    reaped, so an abandon-registration loop cannot grow the engine.
+"""
+import pytest
+
+from repro.cluster import ClusterSimulator, SimConfig
+from repro.cluster.nodes import cpu_node
+from repro.core import (
+    ArbiterContext,
+    CWSIClient,
+    CWSIError,
+    CWSIServer,
+    CommonWorkflowScheduler,
+    DataRef,
+    NodeInfo,
+    PreemptionCandidate,
+    ProvenanceStore,
+    QuotaExceededError,
+    Resources,
+    SchedulingContext,
+    TaskResult,
+    TaskSpec,
+    TaskState,
+    WeightedFairShareArbiter,
+    WorkflowDAG,
+    make_strategy,
+)
+
+GiB = 1 << 30
+
+
+class _NullAdapter:
+    def __init__(self):
+        self.killed = []
+
+    def launch(self, task, node, mem_alloc):
+        pass
+
+    def kill(self, task_id):
+        self.killed.append(task_id)
+
+
+def _burst(wid, width, stages, runtime=20.0):
+    dag = WorkflowDAG(wid)
+    prev = []
+    for s in range(stages):
+        cur = []
+        for i in range(width):
+            tid = f"{wid}.s{s}.t{i}"
+            dag.add_task(TaskSpec(task_id=tid, name=f"st{s}",
+                                  resources=Resources(cpus=1.0,
+                                                      mem_bytes=GiB),
+                                  base_runtime_s=runtime),
+                         deps=(prev[i],) if prev else ())
+            cur.append(tid)
+        prev = cur
+    return dag
+
+
+def _flip_rig(knob, flip_at=25.0, seed=7):
+    """Two backlogged tenants on an undersized cluster; the share
+    assignment inverts mid-run."""
+    nodes = [cpu_node(f"n{i}", cpus=4.0, mem_gib=32) for i in range(2)]
+    sim = ClusterSimulator(nodes, SimConfig(seed=seed,
+                                            runtime_noise_sigma=0.0))
+    cws = CommonWorkflowScheduler(adapter=sim, strategy="fifo_rr",
+                                  arbiter="fair_share",
+                                  max_preemptions_per_round=knob)
+    cws.set_workflow_share("a", 8.0)
+    cws.set_workflow_share("b", 1.0)
+    sim.attach(cws)
+    dags = [_burst("a", 8, 4), _burst("b", 8, 4)]
+    for d in dags:
+        sim.submit_workflow_at(0.0, d)
+    if flip_at is not None:
+        sim.call_at(flip_at, lambda now: (cws.set_workflow_share("a", 0.5),
+                                          cws.set_workflow_share("b", 8.0)))
+    return sim, cws, dags
+
+
+def _trace(dags):
+    return sorted((t.task_id, t.node, round(t.start_time, 9))
+                  for d in dags for t in d.tasks.values())
+
+
+# ---------------------------------------------------------------------------
+# end-to-end preemption
+# ---------------------------------------------------------------------------
+def test_share_flip_preempts_over_share_launches():
+    sim, cws, dags = _flip_rig(knob=3)
+    sim.run()
+    assert all(d.succeeded() for d in dags)
+    assert cws.preemptions > 0
+    # every preempted launch is recorded, and only tenant 'a' (the tenant
+    # whose share was cut while it held the cluster) lost launches
+    preempted = [t for t in cws.provenance.task_traces
+                 if t.state == "PREEMPTED"]
+    assert len(preempted) == cws.preemptions
+    assert {t.workflow_id for t in preempted} == {"a"}
+    # preempted tasks were requeued and still completed (kill-and-requeue,
+    # not kill-and-forget)
+    for tr in preempted:
+        assert dags[0].task(tr.task_id).state == TaskState.SUCCEEDED
+    # conservation: every killed launch's allocation came back in full
+    assert cws.allocations == {}
+    for st in cws.nodes.values():
+        assert st.cpus_free == st.info.cpus
+        assert st.mem_free == st.info.mem_bytes
+        assert st.chips_free == st.info.chips
+    # debt cleared once the preempted work ran again
+    assert cws._preempt_debt == {}
+
+
+def test_preemption_speeds_up_the_promoted_tenant():
+    """The tenant whose share jumped finishes earlier with preemption on
+    than off — the point of killing over-share work."""
+    ends = {}
+    for knob in (0, 3):
+        sim, cws, dags = _flip_rig(knob=knob)
+        sim.run()
+        ends[knob] = max(t.end_time for t in dags[1].tasks.values())
+    assert ends[3] < ends[0], ends
+
+
+def test_preemption_off_is_bit_identical_and_never_consults_preempt():
+    class _Tripwire(WeightedFairShareArbiter):
+        def preempt(self, running, actx):
+            raise AssertionError("preempt() consulted with the knob at 0")
+
+    sim, cws, dags = _flip_rig(knob=0)
+    sim.run()
+    base = _trace(dags)
+    sim2, cws2, dags2 = _flip_rig(knob=0)
+    cws2.arbiter = _Tripwire()
+    sim2.run()
+    assert _trace(dags2) == base
+    assert cws.preemptions == 0 and cws.preempt_rounds == 0
+
+
+def test_no_trigger_means_no_preemption():
+    # a single tenant arms an arrival pass, but with no competing tenant
+    # there is never a victim
+    nodes = [cpu_node(f"n{i}", cpus=4.0, mem_gib=32) for i in range(2)]
+    sim = ClusterSimulator(nodes, SimConfig(seed=3, runtime_noise_sigma=0.0))
+    cws = CommonWorkflowScheduler(adapter=sim, strategy="fifo_rr",
+                                  arbiter="fair_share",
+                                  max_preemptions_per_round=4)
+    sim.attach(cws)
+    solo = _burst("solo", 8, 4)
+    sim.submit_workflow_at(0.0, solo)
+    sim.run()
+    assert solo.succeeded() and cws.preemptions == 0
+    # two tenants, no flips: the only triggers are the two arrivals at
+    # t=0, so every preemption (if any) happens at that instant — once
+    # the triggers are consumed the run is preemption-free
+    sim, cws, dags = _flip_rig(knob=4, flip_at=None)
+    sim.run()
+    assert all(d.succeeded() for d in dags)
+    assert cws.preempt_rounds <= cws.preempt_triggers
+    late = [tr for tr in cws.provenance.task_traces
+            if tr.state == "PREEMPTED" and tr.end_time > 0.0]
+    assert late == []
+
+
+def test_per_task_preemptions_bounded_by_triggers():
+    """No livelock: a task is preempted at most once per armed pass, and
+    passes are bounded by triggers — with k share flips no task can be
+    preempted more than k times."""
+    sim, cws, dags = _flip_rig(knob=2)
+    # two more flips later in the run
+    sim.call_at(45.0, lambda now: cws.set_workflow_share("a", 8.0))
+    sim.call_at(60.0, lambda now: cws.set_workflow_share("a", 0.25))
+    sim.run()
+    counts = {}
+    for tr in cws.provenance.task_traces:
+        if tr.state == "PREEMPTED":
+            counts[tr.task_id] = counts.get(tr.task_id, 0) + 1
+    assert cws.preempt_rounds <= cws.preempt_triggers
+    assert max(counts.values(), default=0) <= cws.preempt_rounds
+
+
+def test_preempted_launch_reports_rejected_by_launch_id():
+    """A preempted launch is dead: its late start/finish must not touch
+    the requeued task (id-carrying adapters) — same contract as node
+    loss."""
+    adapter = _NullAdapter()
+    cws = CommonWorkflowScheduler(adapter=adapter, strategy="fifo_rr",
+                                  arbiter="fair_share",
+                                  max_preemptions_per_round=1)
+    cws.add_node(NodeInfo("n0", cpus=1, mem_bytes=8 * GiB), now=0.0)
+    dag_a = WorkflowDAG("a")
+    dag_a.add_task(TaskSpec(task_id="a.t0", name="p",
+                            resources=Resources(cpus=1.0, mem_bytes=GiB)))
+    cws.submit_workflow(dag_a, now=0.0)          # takes the only slot
+    task = dag_a.task("a.t0")
+    dead_id = task.launch_id
+    cws.on_task_started("a.t0", 1.0, launch_id=dead_id)
+    # tenant b arrives with a huge share: the armed pass preempts a.t0
+    cws.set_workflow_share("a", 1.0)
+    cws.set_workflow_share("b", 100.0)
+    dag_b = WorkflowDAG("b")
+    dag_b.add_task(TaskSpec(task_id="b.t0", name="p",
+                            resources=Resources(cpus=1.0, mem_bytes=GiB)))
+    cws.submit_workflow(dag_b, now=2.0)
+    assert cws.preemptions == 1
+    assert "a.t0" in adapter.killed
+    assert task.state == TaskState.READY and task.launch_id != dead_id
+    assert cws.allocations.get("b.t0") is not None   # beneficiary launched
+    # the dead launch's late echoes: rejected outright
+    cws.on_task_started("a.t0", 2.5, launch_id=dead_id)
+    assert task.state == TaskState.READY
+    cws.on_task_finished("a.t0", 3.0, TaskResult(True), launch_id=dead_id)
+    assert task.state == TaskState.READY and "a.t0" in cws._ready
+    # debt is outstanding until the task runs again
+    assert cws._preempt_debt.get("a", {}).get("a.t0", 0.0) > 0.0
+    cws.on_task_finished("b.t0", 4.0, TaskResult(True))
+    cws.schedule_pending(4.0)
+    assert task.state == TaskState.SCHEDULED
+    assert cws._preempt_debt == {}               # relaunch clears the charge
+
+
+def test_preemption_trims_victim_toward_target_and_stops_at_backlog():
+    """Unit-level: the fair-share preempt() takes victims only while the
+    workflow is above its fair target (overshoot bounded by one launch)
+    and never more than the beneficiary backlog."""
+    dags = {w: WorkflowDAG(w) for w in ("a", "b")}
+    strat = make_strategy("fifo_rr")
+    running = []
+    for i in range(8):
+        t = dags["a"].add_task(TaskSpec(
+            task_id=f"a.r{i}", name="p", workflow_id="a",
+            resources=Resources(cpus=1.0, mem_bytes=GiB)))
+        t.state = TaskState.RUNNING
+        running.append(PreemptionCandidate(task=t, workflow_id="a",
+                                           cost=0.125, progress=float(i)))
+    actx = ArbiterContext(
+        ctx=SchedulingContext(dags=dags, provenance=ProvenanceStore()),
+        strategy_for=lambda t: strat, single_strategy=strat,
+        shares={"a": 1.0, "b": 1.0},
+        appearance_fn=lambda: {"a": 0, "b": 1},
+        usage_fn=lambda totals: {"a": 1.0, "b": 0.0},
+        totals_fn=lambda: {"cpus": 8.0, "mem": float(64 * GiB),
+                           "chips": 0.0},
+        ready_counts={"b": 3},
+        max_preemptions=100,
+    )
+    victims = WeightedFairShareArbiter().preempt(list(running), actx)
+    # equal shares, total usage 1.0 -> a's target is 0.5: only 4 of the
+    # 0.125-cost launches keep a above target, and the backlog of 3
+    # waiting tasks caps the round below even that
+    assert len(victims) == 3
+    unbounded = ArbiterContext(
+        ctx=actx.ctx, strategy_for=actx.strategy_for, single_strategy=strat,
+        shares=actx.shares, appearance_fn=lambda: {"a": 0, "b": 1},
+        usage_fn=lambda totals: {"a": 1.0, "b": 0.0},
+        totals_fn=actx.totals_fn, ready_counts={"b": 100},
+        max_preemptions=100)
+    # with backlog to burn, the trim stops at the target: 4 victims take
+    # a from 1.0 to 0.5 and the fifth is not above target any more
+    assert len(WeightedFairShareArbiter().preempt(list(running),
+                                                  unbounded)) == 4
+    # smallest progress first
+    assert [v.task.task_id for v in victims] == ["a.r0", "a.r1", "a.r2"]
+    # no beneficiary backlog -> no victims at all
+    actx2 = ArbiterContext(
+        ctx=actx.ctx, strategy_for=actx.strategy_for, single_strategy=strat,
+        shares=actx.shares, appearance_fn=lambda: {"a": 0, "b": 1},
+        usage_fn=lambda totals: {"a": 1.0, "b": 0.0},
+        totals_fn=actx.totals_fn, ready_counts={}, max_preemptions=100)
+    assert WeightedFairShareArbiter().preempt(list(running), actx2) == []
+
+
+def test_outstanding_debt_does_not_make_a_tenant_more_preemptible():
+    """Review regression: victim eligibility must run on REAL running
+    usage. A tenant carrying preemption debt from an earlier pass, whose
+    actual running usage is at-or-below its fair target, has nothing
+    reclaimable — repeated triggers must not strip it further. The same
+    debt DOES suppress it as a beneficiary (its requeued backlog is not
+    starvation)."""
+    dags = {w: WorkflowDAG(w) for w in ("a", "b")}
+    strat = make_strategy("fifo_rr")
+    t = dags["a"].add_task(TaskSpec(task_id="a.r0", name="p",
+                                    workflow_id="a",
+                                    resources=Resources(cpus=1.0,
+                                                        mem_bytes=GiB)))
+    t.state = TaskState.RUNNING
+    running = [PreemptionCandidate(task=t, workflow_id="a", cost=0.2,
+                                   progress=0.0)]
+
+    def actx(usage, debt, ready):
+        return ArbiterContext(
+            ctx=SchedulingContext(dags=dags, provenance=ProvenanceStore()),
+            strategy_for=lambda t: strat, single_strategy=strat,
+            shares={"a": 1.0, "b": 1.0},
+            appearance_fn=lambda: {"a": 0, "b": 1},
+            usage_fn=lambda totals: dict(usage),
+            totals_fn=lambda: {"cpus": 8.0, "mem": float(64 * GiB),
+                               "chips": 0.0},
+            preempt_debt=debt, ready_counts=ready, max_preemptions=100)
+    # real usage a=0.2, b=0.3 -> total 0.5, a's target 0.25: a is UNDER
+    # target in real terms; debt of 0.5 must not turn it into a victim
+    out = WeightedFairShareArbiter().preempt(
+        list(running), actx({"a": 0.2, "b": 0.3}, {"a": 0.5}, {"b": 2}))
+    assert out == []
+    # and a's own (requeued, unplaceable) backlog plus debt must not
+    # read as starvation that kills b's work
+    t2 = dags["b"].add_task(TaskSpec(task_id="b.r0", name="p",
+                                     workflow_id="b",
+                                     resources=Resources(cpus=1.0,
+                                                         mem_bytes=GiB)))
+    t2.state = TaskState.RUNNING
+    running_b = [PreemptionCandidate(task=t2, workflow_id="b", cost=0.3,
+                                     progress=0.0)]
+    out = WeightedFairShareArbiter().preempt(
+        list(running_b), actx({"a": 0.0, "b": 0.3}, {"a": 0.4}, {"a": 2}))
+    assert out == []
+
+
+def test_max_queued_counts_copies_out_of_the_running_set():
+    """Review regression: a live speculative copy holds an allocation
+    but is not a DAG task — it must not shrink the queued count and
+    under-enforce max_queued."""
+    from repro.core import LotaruPredictor
+
+    adapter = _NullAdapter()
+    pred = LotaruPredictor()
+    for sz in (GiB, GiB, 2 * GiB, 2 * GiB):
+        pred.observe("slowproc", sz, 10.0)
+    cws = CommonWorkflowScheduler(
+        adapter=adapter, strategy="fifo_rr", predictor=pred,
+        enable_speculation=True, speculation_factor=1.0,
+        speculation_min_runtime=1.0)
+    for i in range(2):
+        cws.add_node(NodeInfo(f"n{i}", cpus=1, mem_bytes=8 * GiB), now=0.0)
+    dag = WorkflowDAG("w")
+    dag.add_task(TaskSpec(task_id="w.t0", name="slowproc",
+                          inputs=(DataRef("in", GiB),),
+                          resources=Resources(cpus=1.0, mem_bytes=GiB)))
+    cws.submit_workflow(dag, now=0.0)
+    cws.on_task_started("w.t0", 0.0, launch_id=dag.task("w.t0").launch_id)
+    assert cws.check_speculation(now=100.0) == 1     # copy is live
+    cws.set_workflow_quota("w", max_queued=1)
+    # one queued slot; w.t0 is running (its copy does not hide it from
+    # the queue math): one more queued task fits, the next must 429
+    cws.submit_task(TaskSpec(task_id="w.t1", name="p", workflow_id="w"),
+                    now=101.0)
+    with pytest.raises(QuotaExceededError):
+        cws.submit_task(TaskSpec(task_id="w.t2", name="p", workflow_id="w"),
+                        now=102.0)
+    assert "w.t2" not in cws.dags["w"]
+
+
+def test_executor_kill_bookkeeping_stays_bounded():
+    """Review regression: a killed worker must retire its cancel-flag
+    entries (the early-return used to skip the cleanup), and a kill for
+    an already-drained task must not recreate an entry."""
+    from repro.cluster.executor import LocalExecutor
+
+    nodes = [NodeInfo("n0", cpus=4, mem_bytes=8 * GiB),
+             NodeInfo("n1", cpus=4, mem_bytes=8 * GiB)]
+    ex = LocalExecutor(nodes)
+    cws = CommonWorkflowScheduler(adapter=ex, strategy="fifo_rr")
+    ex.attach(cws)
+    dag = WorkflowDAG("w")
+    import time as _time
+    dag.add_task(TaskSpec(task_id="w.t0", name="p",
+                          fn=lambda: _time.sleep(0.15) or {"x": 1},
+                          resources=Resources(cpus=1.0, mem_bytes=GiB)))
+    with ex._lock:
+        cws.submit_workflow(dag, now=ex.now())
+    assert "w.t0" in ex._launches
+    ex.kill("w.t0")                          # cooperative cancel
+    _time.sleep(0.5)                         # worker drains, discards
+    with ex._lock:
+        assert ex._cancelled == {} and ex._launches == {}
+    # a kill for a task with no tracked launch is a no-op
+    ex.kill("w.t0")
+    assert ex._cancelled == {}
+    ex.shutdown()
+
+
+def test_speculative_pair_is_never_a_preemption_candidate():
+    """A straggler original and its backup copy hold two allocations, but
+    neither may be preempted — the speculation race owns that pair."""
+    from repro.core import LotaruPredictor
+
+    adapter = _NullAdapter()
+    pred = LotaruPredictor()
+    for sz in (GiB, GiB, 2 * GiB, 2 * GiB):
+        pred.observe("slowproc", sz, 10.0)
+    cws = CommonWorkflowScheduler(
+        adapter=adapter, strategy="fifo_rr", arbiter="fair_share",
+        predictor=pred, enable_speculation=True, speculation_factor=1.0,
+        speculation_min_runtime=1.0, max_preemptions_per_round=8)
+    for i in range(2):
+        cws.add_node(NodeInfo(f"n{i}", cpus=1, mem_bytes=8 * GiB), now=0.0)
+    dag = WorkflowDAG("a")
+    dag.add_task(TaskSpec(task_id="a.t0", name="slowproc",
+                          inputs=(DataRef("in", GiB),),
+                          resources=Resources(cpus=1.0, mem_bytes=GiB)))
+    cws.submit_workflow(dag, now=0.0)
+    cws.on_task_started("a.t0", 0.0, launch_id=dag.task("a.t0").launch_id)
+    assert cws.check_speculation(now=100.0) == 1
+    # tenant b arrives starved: both slots are held by the a.t0 pair, but
+    # the pass must leave the race alone
+    cws.set_workflow_share("b", 100.0)
+    dag_b = WorkflowDAG("b")
+    dag_b.add_task(TaskSpec(task_id="b.t0", name="p",
+                            resources=Resources(cpus=1.0, mem_bytes=GiB)))
+    cws.submit_workflow(dag_b, now=101.0)
+    assert cws.preemptions == 0
+    assert dag.task("a.t0").state == TaskState.RUNNING
+    assert len(cws.spec_copies) == 1
+
+
+# ---------------------------------------------------------------------------
+# per-tenant queue quotas
+# ---------------------------------------------------------------------------
+def test_max_running_caps_launches_across_rounds():
+    adapter = _NullAdapter()
+    cws = CommonWorkflowScheduler(adapter=adapter, strategy="fifo_rr",
+                                  arbiter="fair_share")
+    cws.add_node(NodeInfo("n0", cpus=16, mem_bytes=64 * GiB), now=0.0)
+    cws.set_workflow_quota("w", max_running=2)
+    dag = WorkflowDAG("w")
+    for i in range(6):
+        dag.add_task(TaskSpec(task_id=f"w.t{i}", name="p",
+                              resources=Resources(cpus=1.0, mem_bytes=GiB)))
+    cws.submit_workflow(dag, now=0.0)
+    assert len(cws.allocations) == 2             # capacity for 16, quota 2
+    # idle rounds never creep past the cap
+    cws.schedule(1.0)
+    assert len(cws.allocations) == 2
+    # one finishes -> exactly one more launches
+    running = sorted(cws.allocations)
+    cws.on_task_finished(running[0], 2.0, TaskResult(True))
+    cws.schedule_pending(2.0)
+    assert len(cws.allocations) == 2
+    # lifting the quota releases the backlog
+    cws.set_workflow_quota("w", max_running=None, max_queued=None)
+    assert "w" not in cws.workflow_quotas
+    cws.schedule(3.0)
+    assert len(cws.allocations) == 5
+
+
+@pytest.mark.parametrize("arbiter", ["first_appearance", "fair_share",
+                                     "strict_priority"])
+def test_max_running_holds_under_every_arbiter(arbiter):
+    adapter = _NullAdapter()
+    cws = CommonWorkflowScheduler(adapter=adapter, strategy="rank_min_rr",
+                                  arbiter=arbiter)
+    cws.add_node(NodeInfo("n0", cpus=16, mem_bytes=64 * GiB), now=0.0)
+    cws.set_workflow_quota("a", max_running=1)
+    for wid in ("a", "b"):
+        dag = WorkflowDAG(wid)
+        for i in range(4):
+            dag.add_task(TaskSpec(task_id=f"{wid}.t{i}", name="p",
+                                  resources=Resources(cpus=1.0,
+                                                      mem_bytes=GiB)))
+        cws.submit_workflow(dag, now=0.0)
+    by_wf = {}
+    for alloc in cws.allocations.values():
+        by_wf[alloc.workflow_id] = by_wf.get(alloc.workflow_id, 0) + 1
+    assert by_wf.get("a", 0) == 1                # capped
+    assert by_wf.get("b", 0) == 4                # unlimited tenant fills up
+
+
+def test_fair_share_heap_skips_capped_workflow_in_emission():
+    """Emission-time enforcement: a capped workflow's backlog does not
+    occupy slots in the fair-share order at all."""
+    cws = CommonWorkflowScheduler(adapter=_NullAdapter(), strategy="fifo_rr",
+                                  arbiter="fair_share")
+    # no nodes: every task stays READY, so order() sees the full backlog
+    for wid in ("a", "b"):
+        dag = WorkflowDAG(wid)
+        for i in range(5):
+            dag.add_task(TaskSpec(task_id=f"{wid}.t{i}", name="p",
+                                  resources=Resources(cpus=1.0,
+                                                      mem_bytes=GiB)))
+        cws.submit_workflow(dag, now=0.0)
+    cws.set_workflow_quota("a", max_running=2)
+    ctx = cws._context(1.0)
+    ready = list(cws._ready.values())
+    out = cws.arbiter.order(ready, cws._arbiter_context(ctx))
+    emitted = {}
+    for t in out:
+        emitted[t.spec.workflow_id] = emitted.get(t.spec.workflow_id, 0) + 1
+    assert emitted == {"a": 2, "b": 5}
+
+
+def test_max_queued_rejects_submits_atomically():
+    cws = CommonWorkflowScheduler(adapter=_NullAdapter(), strategy="fifo_rr")
+    cws.set_workflow_quota("w", max_queued=2)
+    for i in range(2):
+        cws.submit_task(TaskSpec(task_id=f"w.t{i}", name="p",
+                                 workflow_id="w"), now=0.0)
+    with pytest.raises(QuotaExceededError):
+        cws.submit_task(TaskSpec(task_id="w.t2", name="p",
+                                 workflow_id="w"), now=0.0)
+    assert "w.t2" not in cws.dags["w"]
+    # whole-DAG submission over the cap is rejected before any mutation
+    big = WorkflowDAG("v")
+    for i in range(3):
+        big.add_task(TaskSpec(task_id=f"v.t{i}", name="p"))
+    cws.set_workflow_quota("v", max_queued=2)
+    with pytest.raises(QuotaExceededError):
+        cws.submit_workflow(big, now=0.0)
+    assert "v" not in cws.dags
+
+
+def test_quota_validation_rejects_untyped_bounds():
+    cws = CommonWorkflowScheduler(adapter=_NullAdapter())
+    q = cws.set_workflow_quota("w", max_running=3, max_queued=0)
+    assert (q.max_running, q.max_queued) == (3, 0)
+    for bad in (-1, 2.5, float("nan"), float("inf"), "many", True):
+        with pytest.raises(ValueError):
+            cws.set_workflow_quota("w", max_running=bad)
+        with pytest.raises(ValueError):
+            cws.set_workflow_quota("w", max_queued=bad)
+    # failed sets did not stick
+    assert cws.workflow_quotas["w"].max_running == 3
+
+
+def test_quota_over_cwsi_roundtrip_and_429():
+    sim = ClusterSimulator([cpu_node("n0")], SimConfig(seed=0))
+    cws = CommonWorkflowScheduler(adapter=sim, strategy="fifo_rr")
+    sim.attach(cws)
+    server = CWSIServer(cws)
+    client = CWSIClient(server)
+    client.register_workflow("w")
+    body = client.set_quota("w", max_running=1, max_queued=2)
+    assert body == {"workflowId": "w", "maxRunning": 1, "maxQueued": 2}
+    status = client.arbiter_status()
+    assert status["quotas"] == {"w": {"maxRunning": 1, "maxQueued": 2}}
+    assert client._call("GET", "/stats")["quotas"]["w"]["maxQueued"] == 2
+    spec = lambda i: TaskSpec(task_id=f"w.t{i}", name="p",
+                              resources=Resources(cpus=1.0, mem_bytes=GiB),
+                              params={"sim": {"runtime": 5.0}})
+    client.submit_task("w", spec(0))
+    client.submit_task("w", spec(1))
+    with pytest.raises(CWSIError) as err:
+        client.submit_task("w", spec(2))
+    assert err.value.code == 429
+    assert "w.t2" not in cws.dags["w"]           # nothing half-added
+    # the workload still drains to completion under quota
+    sim.run()
+    assert cws.workflow_done("w")
+
+
+def test_speculation_honours_max_running():
+    from repro.core import LotaruPredictor
+
+    adapter = _NullAdapter()
+    pred = LotaruPredictor()
+    for sz in (GiB, GiB, 2 * GiB, 2 * GiB):
+        pred.observe("slowproc", sz, 10.0)
+    cws = CommonWorkflowScheduler(
+        adapter=adapter, strategy="fifo_rr", predictor=pred,
+        enable_speculation=True, speculation_factor=1.0,
+        speculation_min_runtime=1.0)
+    for i in range(2):
+        cws.add_node(NodeInfo(f"n{i}", cpus=4, mem_bytes=8 * GiB), now=0.0)
+    cws.set_workflow_quota("w", max_running=1)
+    dag = WorkflowDAG("w")
+    dag.add_task(TaskSpec(task_id="w.t0", name="slowproc",
+                          inputs=(DataRef("in", GiB),),
+                          resources=Resources(cpus=1.0, mem_bytes=GiB)))
+    cws.submit_workflow(dag, now=0.0)
+    cws.on_task_started("w.t0", 0.0, launch_id=dag.task("w.t0").launch_id)
+    # the straggler qualifies, but a copy would be a second allocation
+    assert cws.check_speculation(now=100.0) == 0
+    assert cws.spec_copies == {}
+    # sanity: with the quota lifted the same straggler DOES speculate
+    cws.set_workflow_quota("w")
+    assert cws.check_speculation(now=100.0) == 1
+
+
+# ---------------------------------------------------------------------------
+# registration TTL
+# ---------------------------------------------------------------------------
+def test_abandoned_registrations_are_reaped():
+    """The ROADMAP leak: N register-and-abandon clients no longer grow
+    the engine without bound."""
+    cws = CommonWorkflowScheduler(adapter=_NullAdapter(),
+                                  registration_ttl=100.0)
+    cws.add_node(NodeInfo("n0", cpus=4, mem_bytes=8 * GiB), now=0.0)
+    n = 50
+    for i in range(n):
+        cws.register_workflow(f"ghost-{i}", now=float(i))
+    assert len(cws.dags) == n
+    # the clock advances past every registration's TTL; the next round
+    # reaps them all
+    cws.request_schedule(float(n) + 200.0)
+    cws.schedule_pending(float(n) + 200.0)
+    assert len(cws.dags) == 0
+    assert cws.reaped_registrations == n
+    assert cws._empty_regs == {}
+    # registration itself also reaps (no scheduling round required)
+    for i in range(n):
+        cws.register_workflow(f"ghost2-{i}", now=1000.0 + i)
+    cws.register_workflow("live", now=2000.0)
+    assert len(cws.dags) <= n + 1
+
+
+def test_ttl_spares_workflows_that_got_tasks():
+    cws = CommonWorkflowScheduler(adapter=_NullAdapter(),
+                                  registration_ttl=10.0)
+    cws.add_node(NodeInfo("n0", cpus=4, mem_bytes=8 * GiB), now=0.0)
+    cws.register_workflow("kept", now=0.0)
+    cws.register_workflow("ghost", now=0.0)
+    cws.submit_task(TaskSpec(task_id="kept.t0", name="p", workflow_id="kept",
+                             resources=Resources(cpus=1.0, mem_bytes=GiB)),
+                    now=1.0)
+    cws.request_schedule(100.0)
+    cws.schedule_pending(100.0)
+    assert "kept" in cws.dags and "ghost" not in cws.dags
+    # a re-register within the TTL refreshes the window
+    cws.register_workflow("fresh", now=200.0)
+    cws.register_workflow("fresh", now=209.0)
+    cws.request_schedule(215.0)
+    cws.schedule_pending(215.0)
+    assert "fresh" in cws.dags                   # 215 - 209 < ttl
+    cws.request_schedule(300.0)
+    cws.schedule_pending(300.0)
+    assert "fresh" not in cws.dags
+
+
+def test_reaped_registration_answers_404_over_cwsi():
+    sim = ClusterSimulator([cpu_node("n0")], SimConfig(seed=0))
+    cws = CommonWorkflowScheduler(adapter=sim, registration_ttl=5.0)
+    sim.attach(cws)
+    server = CWSIServer(cws)
+    client = CWSIClient(server)
+    client.register_workflow("ghost")
+    assert client.workflow_state("ghost")["finished"] is True
+    server.clock = 100.0
+    cws.schedule(100.0)
+    with pytest.raises(CWSIError) as err:
+        client.workflow_state("ghost")
+    assert err.value.code == 404
+    # the id is free to register again
+    client.register_workflow("ghost")
+    assert "ghost" in cws.dags
+
+
+def test_ttl_disabled_keeps_the_old_behaviour():
+    cws = CommonWorkflowScheduler(adapter=_NullAdapter(),
+                                  registration_ttl=None)
+    for i in range(5):
+        cws.register_workflow(f"g{i}", now=0.0)
+    cws.request_schedule(1e9)
+    cws.schedule_pending(1e9)
+    assert len(cws.dags) == 5
