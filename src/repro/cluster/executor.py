@@ -17,6 +17,7 @@ import traceback
 from concurrent.futures import ThreadPoolExecutor
 from typing import Any, Callable, Dict, List, Optional
 
+from ..core import commands as _cmd
 from ..core.dag import Task, WorkflowDAG
 from ..core.scheduler import CommonWorkflowScheduler, NodeInfo, TaskResult
 
@@ -44,8 +45,10 @@ class LocalExecutor:
     def attach(self, cws: CommonWorkflowScheduler) -> None:
         self.cws = cws
         with self._lock:
+            # commands through the apply seam, same as the simulator: a
+            # journaled engine records this executor's history verbatim
             for n in self._nodes:
-                cws.add_node(n, now=self.now())
+                cws.apply(_cmd.AddNode(n), self.now())
 
     # ---- ClusterAdapter ----
     def launch(self, task: Task, node: str, mem_alloc: int) -> None:
@@ -69,8 +72,9 @@ class LocalExecutor:
     def _run(self, task: Task, node: str, launch_id: int) -> None:
         assert self.cws is not None
         with self._lock:
-            self.cws.on_task_started(task.task_id, self.now(),
-                                     launch_id=launch_id)
+            self.cws.apply(_cmd.TaskStarted(task.task_id,
+                                            launch_id=launch_id),
+                           self.now())
         t0 = time.monotonic()
         try:
             fn = task.spec.fn
@@ -96,12 +100,13 @@ class LocalExecutor:
                 return
             if ok:
                 self.outputs[task.task_id] = out
-            self.cws.on_task_finished(
-                task.task_id, self.now(),
-                TaskResult(ok, peak_mem_bytes=peak, cpu_seconds=cpu_s,
-                           reason=reason, output=out),
-                launch_id=launch_id,
-            )
+            self.cws.apply(
+                _cmd.TaskFinished(
+                    task.task_id,
+                    TaskResult(ok, peak_mem_bytes=peak, cpu_seconds=cpu_s,
+                               reason=reason, output=out),
+                    launch_id=launch_id),
+                self.now())
             # wall-clock completions have no same-instant batch to
             # coalesce with: run the deferred round now rather than
             # waiting up to poll_s for the driver loop to wake
@@ -112,13 +117,13 @@ class LocalExecutor:
                           timeout_s: float = 600.0) -> Dict[str, Any]:
         assert self.cws is not None
         with self._lock:
-            self.cws.submit_workflow(dag, now=self.now())
+            self.cws.apply(_cmd.SubmitWorkflow(dag), self.now())
         deadline = time.monotonic() + timeout_s
         while True:
             with self._lock:
                 if dag.finished():
                     break
-                self.cws.schedule(self.now())
+                self.cws.apply(_cmd.ScheduleBarrier(force=True), self.now())
             if time.monotonic() > deadline:
                 raise TimeoutError(f"workflow {dag.workflow_id} timed out")
             time.sleep(poll_s)

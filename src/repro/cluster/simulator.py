@@ -25,6 +25,7 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from ..core import commands as _cmd
 from ..core.dag import Task, TaskState, WorkflowDAG
 from ..core.scheduler import CommonWorkflowScheduler, NodeInfo, TaskResult
 
@@ -75,8 +76,11 @@ class ClusterSimulator:
     def attach(self, cws: CommonWorkflowScheduler) -> None:
         self.cws = cws
         cws.staging_bandwidth = self.config.staging_bandwidth
+        # every resource-manager event enters the engine as a command
+        # through the apply seam, so an attached journal records exactly
+        # this simulator's history (replay-identical by construction)
         for n in self._initial_nodes:
-            cws.add_node(n, now=self.now)
+            cws.apply(_cmd.AddNode(n), self.now)
         if cws.enable_speculation:
             self._push(self.now + self.config.speculation_period, "SPEC_CHECK", {})
 
@@ -212,17 +216,18 @@ class ClusterSimulator:
             if ev.kind == "TASK_START":
                 task = self._live(ev.payload["gen"])
                 if task is not None:
-                    cws.on_task_started(task.task_id, self.now,
-                                        launch_id=ev.payload.get("lid"))
+                    cws.apply(_cmd.TaskStarted(
+                        task.task_id, launch_id=ev.payload.get("lid")),
+                        self.now)
 
             elif ev.kind == "TASK_FINISH":
                 gen = ev.payload["gen"]
                 task = self._live(gen)
                 if task is not None:
                     self._launch_gen.pop(task.task_id, None)
-                    cws.on_task_finished(task.task_id, self.now,
-                                         ev.payload["result"],
-                                         launch_id=ev.payload.get("lid"))
+                    cws.apply(_cmd.TaskFinished(
+                        task.task_id, ev.payload["result"],
+                        launch_id=ev.payload.get("lid")), self.now)
                 self._retire(gen)
 
             elif ev.kind == "NODE_FAIL":
@@ -235,16 +240,17 @@ class ClusterSimulator:
                             and self._launch_gen.get(task.task_id) == gen:
                         self._launch_gen.pop(task.task_id, None)
                     self._retire(gen)
-                cws.remove_node(node, self.now)
+                cws.apply(_cmd.RemoveNode(node), self.now)
 
             elif ev.kind == "NODE_JOIN":
-                cws.add_node(ev.payload["info"], self.now)
+                cws.apply(_cmd.AddNode(ev.payload["info"]), self.now)
 
             elif ev.kind == "NODE_SLOW":
-                cws.set_node_speed(ev.payload["node"], ev.payload["speed"], self.now)
+                cws.apply(_cmd.SetNodeSpeed(ev.payload["node"],
+                                            ev.payload["speed"]), self.now)
 
             elif ev.kind == "WF_SUBMIT":
-                cws.submit_workflow(ev.payload["dag"], self.now)
+                cws.apply(_cmd.SubmitWorkflow(ev.payload["dag"]), self.now)
 
             elif ev.kind == "CALL":
                 ev.payload["fn"](self.now)

@@ -23,7 +23,10 @@ from .arbiter import (  # noqa: F401
     dominant_cost,
     make_arbiter,
 )
+from . import commands  # noqa: F401
 from .cwsi import CWSI_VERSION, CWSIClient, CWSIError, CWSIServer  # noqa: F401
+from .cwsi_http import CWSIHTTPServer, http_transport  # noqa: F401
+from .journal import Journal, engine_config, read_commands, recover  # noqa: F401
 from .node_index import NodeCapacityIndex, NodeCaps  # noqa: F401
 from .predict import (  # noqa: F401
     FeedbackMemoryPredictor,

@@ -20,6 +20,7 @@ touching either side. The verb surface follows Lehmann et al. (CCGrid'23):
   PUT  /{version}/workflow/{wid}/share                 set fair-share weight
   PUT  /{version}/workflow/{wid}/quota                 set queue quota
   POST /{version}/schedule                             scheduling barrier
+  PUT  /{version}/clock                                advance server clock
   GET  /{version}/arbiter                              arbitration status
   PUT  /{version}/arbiter                              choose arbiter policy
   GET  /{version}/stats                                op-counter snapshot
@@ -97,17 +98,29 @@ Abandoned registrations are reaped: a workflow registered but never
 given tasks falls out of the engine after ``registration_ttl`` seconds
 (a later state query answers 404, like any unknown id).
 
+Every mutating route constructs a typed command record (``commands.py``)
+and applies it through the engine's single ``apply`` seam, so an engine
+with a write-ahead journal attached (``journal.py``) logs exactly the
+CWSI's mutation history — read routes never touch the seam. The server
+clock is monotonic: remote resource managers advance it with
+``PUT /clock`` (body ``{"now": <seconds>}``), and backwards time is a
+400 — journal replay depends on ordered timestamps. For remote SWMS
+clients, ``cwsi_http.py`` fronts ``handle`` with a stdlib HTTP server
+under a single-writer lock.
+
 Error envelope: every response is ``{"status": int, "body": {...}}``;
 malformed bodies are 400, unknown resources 404, quota rejections 429,
-and an error response never mutates scheduler state (the conformance
-suite pins this).
+and an error response never mutates scheduler state — nor reaches the
+journal (the conformance suite pins this).
 """
 from __future__ import annotations
 
 import json
+import math
 from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Tuple
 
+from . import commands as _cmd
 from .dag import TaskSpec, TaskState
 from .scheduler import CommonWorkflowScheduler, QuotaExceededError
 
@@ -154,6 +167,13 @@ class CWSIServer:
 
     @clock.setter
     def clock(self, value: float) -> None:
+        if value < self._clock:
+            # journal replay depends on ordered timestamps (and every TTL
+            # and trace in the engine assumes time moves forward): going
+            # backwards is a driver bug, surfaced as 400 over the wire
+            raise CWSIError(
+                400, f"clock may not move backwards "
+                     f"({value!r} < {self._clock!r})")
         if value != self._clock:
             # the clock moving closes the current submit batch: the round
             # it deferred runs at the batch's own timestamp
@@ -196,8 +216,9 @@ class CWSIServer:
             meta = req.body or {}
             # the server clock stamps the registration so abandoned
             # (never-submitted-to) registrations age out of the engine
-            self.scheduler.register_workflow(wid, meta.get("name", wid),
-                                             meta, now=self.clock)
+            self.scheduler.apply(
+                _cmd.RegisterWorkflow(wid, meta.get("name", wid), meta),
+                self.clock)
             return 200, {"workflowId": wid}
 
         if (method == "POST" and len(parts) == 3
@@ -216,11 +237,12 @@ class CWSIServer:
                     and all(isinstance(d, str) for d in raw_deps)):
                 raise CWSIError(400, "'dependsOn' must be a list of task ids")
             deps = tuple(raw_deps)
-            task = self.scheduler.submit_task(spec, deps, now=self.clock)
-            # batch-friendly: mark the engine pending instead of running a
-            # round per submitted task (sync_schedule engines still run
-            # the round inline here)
-            self.scheduler.request_schedule(self.clock)
+            # schedule=True folds the round request into the command:
+            # batch-friendly (the engine is marked pending instead of
+            # running a round per submitted task; sync_schedule engines
+            # still run the round inline) and replay-exact
+            task = self.scheduler.apply(
+                _cmd.SubmitTask(spec, deps, schedule=True), self.clock)
             return 200, {"taskId": task.task_id, "state": task.state.value}
 
         if (method == "GET" and len(parts) == 5
@@ -253,18 +275,36 @@ class CWSIServer:
         if method == "POST" and parts == ["schedule"]:
             # explicit scheduling barrier for RMs without a clock: close
             # the current submit batch and run ONE coalesced round now
-            launched = self.scheduler.schedule(self.clock)
+            launched = self.scheduler.apply(
+                _cmd.ScheduleBarrier(force=True), self.clock)
             self.barrier_rounds += 1
             return 200, {"launched": launched,
                          "barrierRounds": self.barrier_rounds}
+
+        if method == "PUT" and parts == ["clock"]:
+            # remote resource managers advance virtual time over the wire
+            # (in-process drivers set .clock directly); the setter runs
+            # any pending coalesced round and rejects backwards time
+            body = req.body or {}
+            t = body.get("now")
+            if (isinstance(t, bool) or not isinstance(t, (int, float))
+                    or not math.isfinite(t)):
+                raise CWSIError(400, "body must carry a finite 'now' number")
+            self.clock = float(t)
+            return 200, {"clock": self._clock}
 
         if (method == "PUT" and len(parts) == 3
                 and parts[0] == "workflow" and parts[2] == "strategy"):
             wid = parts[1]
             name = (req.body or {}).get("strategy", "")
+            if not isinstance(name, str):
+                # a non-string here used to reach make_strategy's dict
+                # lookup and escape as an unhashable-type TypeError (a
+                # 500-shaped crash); it is a client bug like any other
+                raise CWSIError(400, "body must carry a 'strategy' name")
             # scoped to this workflow only — does NOT mutate the global
             # strategy other workflows are scheduled with
-            self.scheduler.set_workflow_strategy(wid, name)
+            self.scheduler.apply(_cmd.SetStrategy(wid, name), self.clock)
             return 200, {"workflowId": wid, "strategy": name}
 
         if (method == "PUT" and len(parts) == 3
@@ -273,7 +313,8 @@ class CWSIServer:
             body = req.body or {}
             if "share" not in body:
                 raise CWSIError(400, "body must carry a 'share' number")
-            share = self.scheduler.set_workflow_share(wid, body["share"])
+            share = self.scheduler.apply(
+                _cmd.SetShare(wid, body["share"]), self.clock)
             return 200, {"workflowId": wid, "share": share}
 
         if (method == "PUT" and len(parts) == 3
@@ -287,9 +328,9 @@ class CWSIServer:
             if unknown:
                 raise CWSIError(
                     400, f"unknown quota fields: {sorted(unknown)}")
-            quota = self.scheduler.set_workflow_quota(
-                wid, max_running=body.get("maxRunning"),
-                max_queued=body.get("maxQueued"))
+            quota = self.scheduler.apply(
+                _cmd.SetQuota(wid, body.get("maxRunning"),
+                              body.get("maxQueued")), self.clock)
             return 200, {"workflowId": wid,
                          "maxRunning": quota.max_running,
                          "maxQueued": quota.max_queued}
@@ -301,7 +342,7 @@ class CWSIServer:
             name = (req.body or {}).get("arbiter", "")
             if not isinstance(name, str):
                 raise CWSIError(400, "body must carry an 'arbiter' name")
-            arb = self.scheduler.set_arbiter(name)
+            arb = self.scheduler.apply(_cmd.SetArbiter(name), self.clock)
             return 200, {"arbiter": arb.name}
 
         if method == "GET" and parts == ["stats"]:
@@ -319,6 +360,11 @@ class CWSIServer:
                 "quotas": stats["workflow_quotas"],
                 "preemptions": stats["preemptions"],
                 "reapedRegistrations": stats["reaped_registrations"],
+                "reapedPolicies": stats["reaped_policies"],
+                "journaled": stats["journaled"],
+                "journalSeq": (self.scheduler.journal.seq
+                               if self.scheduler.journal is not None else 0),
+                "clock": self._clock,
             }
 
         if (method == "GET" and len(parts) == 3
@@ -366,12 +412,19 @@ class CWSIClient:
     """SWMS side: thin wrapper producing CWSI messages.
 
     ``transport`` is any ``str -> str`` callable; by default it is
-    ``server.handle`` (in-process), but it serialises every payload so it can
-    be pointed at a socket verbatim.
+    ``server.handle`` (in-process), but it serialises every payload so it
+    can be pointed at a socket verbatim — ``cwsi_http.http_transport``
+    adapts it onto a real HTTP connection with zero client changes.
     """
 
-    def __init__(self, server: CWSIServer) -> None:
-        self._transport = server.handle
+    def __init__(self, server: Optional[CWSIServer] = None,
+                 transport: Optional[Any] = None) -> None:
+        if transport is not None:
+            self._transport = transport
+        elif server is not None:
+            self._transport = server.handle
+        else:
+            raise ValueError("CWSIClient needs a server or a transport")
 
     def _call(self, method: str, path: str,
               body: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
@@ -419,6 +472,11 @@ class CWSIClient:
         """Close the submit batch: run one coalesced scheduling round now
         (for resource managers that never advance the server clock)."""
         return self._call("POST", "/schedule")["launched"]
+
+    def advance_clock(self, now: float) -> float:
+        """Advance the server's virtual clock (monotonic; backwards is a
+        400). Runs any pending coalesced round at the old timestamp."""
+        return self._call("PUT", "/clock", {"now": now})["clock"]
 
     def set_arbiter(self, arbiter: str) -> str:
         return self._call("PUT", "/arbiter", {"arbiter": arbiter})["arbiter"]

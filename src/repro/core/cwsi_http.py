@@ -1,0 +1,144 @@
+"""A real HTTP transport for the CWSI (stdlib only).
+
+The CWSI was designed so its in-process ``dumps``/``loads`` seam could be
+"swapped for HTTP without touching either side" — this module is that
+swap. ``CWSIHTTPServer`` fronts an existing ``CWSIServer.handle`` with a
+``ThreadingHTTPServer``; ``http_transport`` produces the matching
+``str -> str`` callable so ``CWSIClient(transport=...)`` works unchanged
+against a remote scheduler.
+
+Semantics are deliberately thin:
+
+* Every request maps verbatim onto a CWSI message ``{method, path,
+  body}`` — the CWSI's own routing decides method case, unknown paths,
+  and body validation, so in-process and HTTP deployments share one
+  conformance surface. The HTTP status line is always 200; the CWSI
+  status travels inside the JSON envelope (it is protocol data, not
+  transport data).
+* A body that is not valid JSON is answered 400 *by the transport*,
+  without ever touching the server — a malformed request must not reach
+  the engine, let alone its journal.
+* Handler threads serialise through a single writer lock around
+  ``handle``: the engine below is not thread-safe, and the journal's
+  write-ahead ordering (append, then apply) must not interleave. Reads
+  take the same lock — snapshot consistency is worth more than read
+  concurrency at CWSI rates.
+"""
+from __future__ import annotations
+
+import json
+import threading
+import urllib.request
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import Any, Callable, Optional, Tuple
+
+from .cwsi import CWSIServer, _Request
+
+
+class CWSIHTTPServer:
+    """Serve a ``CWSIServer`` over HTTP on a daemon thread.
+
+    ``port=0`` (the default) binds an ephemeral port; read ``address``
+    (host, port) or ``url`` after construction. ``stop()`` shuts the
+    listener down; the object is also a context manager.
+    """
+
+    def __init__(self, server: CWSIServer, host: str = "127.0.0.1",
+                 port: int = 0) -> None:
+        self.cwsi = server
+        self._lock = threading.Lock()
+        outer = self
+
+        class Handler(BaseHTTPRequestHandler):
+            protocol_version = "HTTP/1.1"
+
+            # Accept ANY method token (GET, put, PATCH, ...): the CWSI
+            # owns method semantics, including normalising case and
+            # 404-ing verbs it has no route for. BaseHTTPRequestHandler
+            # dispatches to do_<METHOD>, so resolve them all to _handle.
+            def __getattr__(self, name: str):
+                if name.startswith("do_"):
+                    return self._handle
+                raise AttributeError(name)
+
+            def _handle(self) -> None:
+                length = int(self.headers.get("Content-Length") or 0)
+                raw = self.rfile.read(length) if length else b""
+                body: Optional[Any] = None
+                if raw:
+                    try:
+                        body = json.loads(raw)
+                    except ValueError:
+                        # transport-level reject: the engine (and its
+                        # journal) never sees a request that failed to
+                        # parse
+                        self._reply({"status": 400, "body": {
+                            "error": "request body is not valid JSON"}})
+                        return
+                message = json.dumps({"method": self.command,
+                                      "path": self.path, "body": body})
+                with outer._lock:
+                    resp = outer.cwsi.handle(message)
+                self._reply(json.loads(resp))
+
+            def _reply(self, envelope: Any) -> None:
+                payload = json.dumps(envelope).encode()
+                self.send_response(200)
+                self.send_header("Content-Type", "application/json")
+                self.send_header("Content-Length", str(len(payload)))
+                self.end_headers()
+                self.wfile.write(payload)
+
+            def log_message(self, fmt: str, *args: Any) -> None:
+                pass                     # tests run thousands of requests
+
+        self._httpd = ThreadingHTTPServer((host, port), Handler)
+        self._thread = threading.Thread(
+            target=self._httpd.serve_forever, daemon=True,
+            name="cwsi-http")
+        self._thread.start()
+
+    @property
+    def address(self) -> Tuple[str, int]:
+        host, port = self._httpd.server_address[:2]
+        return str(host), int(port)
+
+    @property
+    def url(self) -> str:
+        host, port = self.address
+        return f"http://{host}:{port}"
+
+    def stop(self) -> None:
+        self._httpd.shutdown()
+        self._httpd.server_close()
+        self._thread.join(timeout=5.0)
+
+    def __enter__(self) -> "CWSIHTTPServer":
+        return self
+
+    def __exit__(self, *exc: Any) -> None:
+        self.stop()
+
+
+def http_transport(base_url: str,
+                   timeout: float = 30.0) -> Callable[[str], str]:
+    """A ``str -> str`` CWSI transport over HTTP.
+
+    Decodes the client's serialised message, issues the same method/path/
+    body as a real HTTP request against ``base_url``, and returns the
+    response envelope — so ``CWSIClient(transport=http_transport(url))``
+    is wire-identical to the in-process client.
+    """
+    base = base_url.rstrip("/")
+
+    def transport(raw: str) -> str:
+        req = _Request.decode(raw)
+        data = (json.dumps(req.body).encode()
+                if req.body is not None else None)
+        http_req = urllib.request.Request(
+            base + req.path, data=data, method=req.method,
+            headers={"Content-Type": "application/json"})
+        with urllib.request.urlopen(http_req, timeout=timeout) as resp:
+            return resp.read().decode()
+
+    return transport

@@ -189,8 +189,12 @@ class WorkflowDAG:
         self.workflow_id = workflow_id
         self.name = name or workflow_id
         self.tasks: Dict[str, Task] = {}
-        self.children: Dict[str, Set[str]] = defaultdict(set)
-        self.parents: Dict[str, Set[str]] = defaultdict(set)
+        # adjacency is insertion-ordered (dict-of-None used as an ordered
+        # set): every iteration over edges must be deterministic across
+        # processes, because journal replay re-derives readiness order —
+        # and hence ready_seq tie-breaks — from it
+        self.children: Dict[str, Dict[str, None]] = defaultdict(dict)
+        self.parents: Dict[str, Dict[str, None]] = defaultdict(dict)
         self._rank_cache: Optional[Dict[str, float]] = None
         # --- incremental scheduling state ---
         # unmet dependency count: number of parents not yet SUCCEEDED
@@ -245,8 +249,8 @@ class WorkflowDAG:
             raise CycleError(f"self-dependency on {parent!r}")
         if child in self.children[parent]:
             return                      # duplicate edge: idempotent
-        self.children[parent].add(child)
-        self.parents[child].add(parent)
+        self.children[parent][child] = None
+        self.parents[child][parent] = None
         if self.tasks[parent].state != TaskState.SUCCEEDED:
             self._unmet[child] = self._unmet.get(child, 0) + 1
             if self.tasks[child].state == TaskState.PENDING:
@@ -464,10 +468,13 @@ class WorkflowDAG:
             "workflowId": self.workflow_id,
             "name": self.name,
             "tasks": [t.spec.to_json() for t in self.tasks.values()],
+            # insertion order, not sorted: from_json(to_json(dag)) must
+            # rebuild the exact edge-insertion order the live dag had, so
+            # a replayed engine promotes runnable tasks in the same order
             "edges": [
                 {"from": p, "to": c}
                 for p, cs in self.children.items()
-                for c in sorted(cs)
+                for c in cs
             ],
         }
 

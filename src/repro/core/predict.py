@@ -161,6 +161,10 @@ class LotaruPredictor:
 # --------------------------------------------------------------------------
 # Peak-memory prediction with under-provisioning retries (paper §5).
 # --------------------------------------------------------------------------
+def _mem_model() -> BayesianLinReg:
+    return BayesianLinReg(beta=50.0)
+
+
 class FeedbackMemoryPredictor:
     """Linear peak-mem-vs-input-size model with safety margin.
 
@@ -172,9 +176,10 @@ class FeedbackMemoryPredictor:
 
     def __init__(self, sigma_margin: float = 2.0, floor_bytes: int = 64 << 20):
         # tighter noise prior than the runtime model: peak memory is far
-        # less dispersed than runtime (beta = 1/sigma^2, sigma ≈ 0.14 log)
-        self.models: Dict[str, BayesianLinReg] = defaultdict(
-            lambda: BayesianLinReg(beta=50.0))
+        # less dispersed than runtime (beta = 1/sigma^2, sigma ≈ 0.14 log).
+        # Module-level factory, not a lambda: journal snapshots pickle the
+        # engine, predictors included.
+        self.models: Dict[str, BayesianLinReg] = defaultdict(_mem_model)
         self.sigma_margin = sigma_margin
         self.floor = floor_bytes
         # empirical log-residuals per task type: high-variance tools (e.g.

@@ -17,7 +17,13 @@ exclusively through the CWSI (``cwsi.py``). The engine owns:
     converges; per-tenant queue quotas (``max_running`` at emission,
     ``max_queued`` at submission) bound what any one tenant can hold,
   * a registration TTL that reaps workflows registered but never given
-    tasks (completion-driven retirement cannot see them).
+    tasks (completion-driven retirement cannot see them), and the same
+    TTL for shares/quotas declared for workflow ids that never register,
+  * the command seam (``commands.py``): every mutation above enters
+    through ``apply(cmd, now)`` — validate, write-ahead journal
+    (``journal.py``, optional), then run — so a journal replay rebuilds
+    the engine bit-identically (the public mutator methods are thin
+    wrappers constructing the corresponding command).
 
 The event→decision path is amortized constant time: events mark the
 scheduler pending (``request_schedule``) and the driver coalesces every
@@ -49,11 +55,11 @@ are expressed as multiple cooperating tasks.
 """
 from __future__ import annotations
 
-import itertools
 import logging
 from dataclasses import dataclass, field, replace
 from typing import Any, Callable, Dict, List, Optional, Protocol, Tuple
 
+from . import commands as _cmd
 from .arbiter import (
     Arbiter,
     ArbiterContext,
@@ -78,6 +84,28 @@ from .strategies import (
 log = logging.getLogger("repro.cws")
 
 
+class _Seq:
+    """A picklable monotonic counter (`itertools.count` cannot pickle,
+    and journal snapshots pickle the whole engine — the ready/launch
+    sequences ARE decision state, so they must survive recovery)."""
+
+    __slots__ = ("n",)
+
+    def __init__(self, start: int = 1) -> None:
+        self.n = start
+
+    def __next__(self) -> int:
+        n = self.n
+        self.n = n + 1
+        return n
+
+    def __getstate__(self):
+        return self.n
+
+    def __setstate__(self, n):
+        self.n = n
+
+
 @dataclass
 class NodeInfo:
     """Static description of a node/slice as registered by the resource manager."""
@@ -90,6 +118,25 @@ class NodeInfo:
     speed_factor: float = 1.0
     labels: Dict[str, str] = field(default_factory=dict)
 
+    def to_json(self) -> Dict[str, Any]:
+        return {
+            "name": self.name, "cpus": self.cpus,
+            "memBytes": self.mem_bytes, "chips": self.chips,
+            "hbmBytesPerChip": self.hbm_bytes_per_chip,
+            "speedFactor": self.speed_factor, "labels": dict(self.labels),
+        }
+
+    @staticmethod
+    def from_json(d: Dict[str, Any]) -> "NodeInfo":
+        return NodeInfo(
+            name=d["name"], cpus=float(d.get("cpus", 8.0)),
+            mem_bytes=int(d.get("memBytes", 32 << 30)),
+            chips=int(d.get("chips", 0)),
+            hbm_bytes_per_chip=int(d.get("hbmBytesPerChip", 16 << 30)),
+            speed_factor=float(d.get("speedFactor", 1.0)),
+            labels=dict(d.get("labels") or {}),
+        )
+
 
 @dataclass
 class TaskResult:
@@ -101,6 +148,26 @@ class TaskResult:
     oom: bool = False
     reason: str = ""
     output: Any = None
+
+    # ``output`` is deliberately NOT journaled: the engine never reads it
+    # (only ``Executor.run_to_completion`` hands it back to the client),
+    # and a recovered engine re-credits completions, it does not re-run
+    # them — so the wire form carries exactly what decisions depend on.
+    def to_json(self) -> Dict[str, Any]:
+        return {
+            "success": self.success, "peakMemBytes": self.peak_mem_bytes,
+            "cpuSeconds": self.cpu_seconds, "oom": self.oom,
+            "reason": self.reason,
+        }
+
+    @staticmethod
+    def from_json(d: Dict[str, Any]) -> "TaskResult":
+        return TaskResult(
+            success=bool(d["success"]),
+            peak_mem_bytes=int(d.get("peakMemBytes", 0)),
+            cpu_seconds=float(d.get("cpuSeconds", 0.0)),
+            oom=bool(d.get("oom", False)), reason=d.get("reason", ""),
+        )
 
 
 class ClusterAdapter(Protocol):
@@ -192,6 +259,10 @@ class CommonWorkflowScheduler:
         registration_ttl: Optional[float] = 3600.0,
     ) -> None:
         self.adapter = adapter
+        # write-ahead journal (core/journal.py). None (the default) keeps
+        # today's inline behaviour exactly; Journal.attach() sets it, after
+        # which every apply() append-logs the command BEFORE it runs.
+        self.journal = None
         self.strategy: Strategy = (
             make_strategy(strategy) if isinstance(strategy, str) else strategy
         )
@@ -226,7 +297,7 @@ class CommonWorkflowScheduler:
         # order cache (a workflow's sorted ready queue is reused across
         # rounds until its membership or its strategy's token moves)
         self._bucket_version: Dict[str, int] = {}
-        self._ready_seq = itertools.count(1)
+        self._ready_seq = _Seq(1)
         # wid -> (cache token, [(priority key, task), ...] sorted)
         self._order_cache: Dict[str, Tuple[Any, List[Tuple[Any, Task]]]] = {}
         self.priority_sorts = 0        # full per-workflow queue sorts
@@ -253,7 +324,7 @@ class CommonWorkflowScheduler:
         # engine-issued launch ids: on_task_started/on_task_finished reports
         # carrying a stale id (a dead launch racing its relaunch) are
         # rejected without the adapter needing its own generation masking
-        self._launch_seq = itertools.count(1)
+        self._launch_seq = _Seq(1)
         # --- inter-workflow arbitration (arbiter.py) ---
         # the arbiter interleaves per-workflow priority lists; shares feed
         # fair-share / strict-priority policies (CWSI PUT .../share)
@@ -298,6 +369,15 @@ class CommonWorkflowScheduler:
         self.registration_ttl = registration_ttl
         self._empty_regs: Dict[str, float] = {}
         self.reaped_registrations = 0
+        # --- orphaned-policy TTL (same leak, policy-shaped) ---
+        # set_workflow_share / set_workflow_quota on a wid that never
+        # registers used to persist forever (shares may legitimately be
+        # declared pre-registration, so there is no error to raise).
+        # Orphaned policy sits in this insertion-ordered map (wid ->
+        # last_policy_set_at) and reaps under the same TTL; registration
+        # lifts the wid out, after which retirement owns the cleanup.
+        self._orphan_policy: Dict[str, float] = {}
+        self.reaped_policies = 0
         # --- incremental arbiter accounting ---
         # Cluster totals and per-workflow dominant-resource usage are
         # maintained as deltas on launch/release (and recharged on the
@@ -356,9 +436,51 @@ class CommonWorkflowScheduler:
         self._retired_rank_ops = 0
 
     # ------------------------------------------------------------------
+    # the command seam
+    # ------------------------------------------------------------------
+    def apply(self, cmd: "_cmd.Command", now: float = 0.0) -> Any:
+        """Apply one command record — the single mutation entry point.
+
+        Ordering is the WAL contract: ``validate`` raises first (a
+        rejected request never reaches the journal and never mutates),
+        then the command is appended to the journal (write-ahead: the log
+        always covers at least what the engine has done), then it runs.
+        With no journal attached this is exactly the pre-seam call.
+        """
+        cmd.validate(self)
+        journal = self.journal
+        if journal is not None:
+            journal.append(now, cmd)
+        result = cmd.run(self, now)
+        if journal is not None and journal.snapshot_every > 0:
+            journal.maybe_snapshot(self)
+        return result
+
+    def __getstate__(self):
+        # Snapshots pickle the engine. Excluded on purpose: the adapter
+        # (a live resource manager / simulator — recovery re-wires its
+        # own), the journal (the snapshot lives *inside* it), the
+        # completion callback, and any instance-level ``schedule``
+        # override (benchmarks monkeypatch a timing closure over the
+        # method; a closure is not engine state).
+        state = dict(self.__dict__)
+        for k in ("adapter", "journal", "on_workflow_done", "schedule"):
+            state.pop(k, None)
+        return state
+
+    def __setstate__(self, state):
+        self.__dict__.update(state)
+        self.adapter = None
+        self.journal = None
+        self.on_workflow_done = None
+
+    # ------------------------------------------------------------------
     # resource-manager side: infrastructure events
     # ------------------------------------------------------------------
     def add_node(self, info: NodeInfo, now: float = 0.0) -> None:
+        self.apply(_cmd.AddNode(info), now)
+
+    def _apply_add_node(self, info: NodeInfo, now: float) -> None:
         self.nodes[info.name] = _NodeState(
             info=info,
             cpus_free=info.cpus,
@@ -377,6 +499,9 @@ class CommonWorkflowScheduler:
         self.request_schedule(now)
 
     def remove_node(self, name: str, now: float = 0.0) -> None:
+        self.apply(_cmd.RemoveNode(name), now)
+
+    def _apply_remove_node(self, name: str, now: float) -> None:
         """Node failure / scale-in: requeue everything running there.
 
         Every victim's allocation/memory bookkeeping is released (it used
@@ -419,6 +544,10 @@ class CommonWorkflowScheduler:
         self.request_schedule(now)
 
     def set_node_speed(self, name: str, speed_factor: float, now: float = 0.0) -> None:
+        self.apply(_cmd.SetNodeSpeed(name, speed_factor), now)
+
+    def _apply_set_node_speed(self, name: str, speed_factor: float,
+                              now: float) -> None:
         if name in self.nodes:
             self.nodes[name].info.speed_factor = speed_factor
             if self._node_index is not None:
@@ -436,7 +565,13 @@ class CommonWorkflowScheduler:
     def register_workflow(self, workflow_id: str, name: str = "",
                           meta: Optional[Dict[str, Any]] = None,
                           now: float = 0.0) -> WorkflowDAG:
+        return self.apply(_cmd.RegisterWorkflow(workflow_id, name, meta), now)
+
+    def _apply_register_workflow(self, workflow_id: str, name: str,
+                                 meta: Optional[Dict[str, Any]],
+                                 now: float) -> WorkflowDAG:
         self._reap_registrations(now)
+        self._orphan_policy.pop(workflow_id, None)
         if workflow_id in self.dags:
             if not self.dags[workflow_id].tasks:
                 # still empty: a re-register refreshes its TTL window
@@ -455,6 +590,10 @@ class CommonWorkflowScheduler:
 
     def submit_task(self, spec: TaskSpec, deps: Tuple[str, ...] = (),
                     now: float = 0.0) -> Task:
+        return self.apply(_cmd.SubmitTask(spec, tuple(deps)), now)
+
+    def _apply_submit_task(self, spec: TaskSpec, deps: Tuple[str, ...],
+                           now: float, schedule: bool = False) -> Task:
         dag = self.dags.get(spec.workflow_id)
         pending = dag is None
         self._check_queued_quota(spec.workflow_id, dag, adding=1)
@@ -469,11 +608,20 @@ class CommonWorkflowScheduler:
             self.provenance.register_workflow(spec.workflow_id, {"name": ""})
             self._arm_preemption()             # a new tenant arrived
         self._empty_regs.pop(spec.workflow_id, None)
+        self._orphan_policy.pop(spec.workflow_id, None)
         task.submit_time = now
         self._mark_dirty(spec.workflow_id)
+        if schedule:
+            # CWSI POST .../task cadence: each accepted task requests a
+            # round (coalesced by the driver); part of the command so
+            # replay reproduces sched_round_events and round timing
+            self.request_schedule(now)
         return task
 
     def submit_workflow(self, dag: WorkflowDAG, now: float = 0.0) -> None:
+        self.apply(_cmd.SubmitWorkflow(dag), now)
+
+    def _apply_submit_workflow(self, dag: WorkflowDAG, now: float) -> None:
         dag.validate()
         old = self.dags.get(dag.workflow_id)
         if old is not dag:
@@ -505,6 +653,7 @@ class CommonWorkflowScheduler:
             # the replaced DAG's preempted-work debt charges dead tasks
             self._preempt_debt.pop(dag.workflow_id, None)
         self.dags[dag.workflow_id] = dag
+        self._orphan_policy.pop(dag.workflow_id, None)
         # an empty whole-DAG submission is registration-shaped: it ages
         # out under the TTL like a bare registration (re-submission with
         # tasks, or any later task submit, lifts it out)
@@ -521,18 +670,22 @@ class CommonWorkflowScheduler:
         self.schedule(now)
 
     def set_workflow_strategy(self, workflow_id: str,
-                              strategy: str | Strategy) -> Strategy:
+                              strategy: str | Strategy,
+                              now: float = 0.0) -> Strategy:
         """Per-workflow strategy override (CWSI: PUT .../strategy).
 
         Only tasks of ``workflow_id`` are prioritized/placed by it; all
         other workflows keep the scheduler-wide strategy.
         """
-        strat = make_strategy(strategy) if isinstance(strategy, str) else strategy
+        return self.apply(_cmd.SetStrategy(workflow_id, strategy), now)
+
+    def _apply_set_strategy(self, workflow_id: str,
+                            strat: Strategy) -> Strategy:
         old = self.workflow_strategies.get(workflow_id)
         self.workflow_strategies[workflow_id] = strat
         # the cached order was computed by the previous strategy — drop it
-        # (the id()-based cache key cannot be trusted across a strategy
-        # object's lifetime) and let the replaced override release any
+        # (the name-based cache key cannot tell two same-name strategy
+        # objects apart) and let the replaced override release any
         # per-workflow state of its own
         self._order_cache.pop(workflow_id, None)
         if old is not None and old is not strat and old is not self.strategy:
@@ -545,39 +698,44 @@ class CommonWorkflowScheduler:
     # ------------------------------------------------------------------
     # inter-workflow arbitration (CWSI: PUT .../share, GET/PUT /arbiter)
     # ------------------------------------------------------------------
-    def set_workflow_share(self, workflow_id: str, share: float) -> float:
+    def set_workflow_share(self, workflow_id: str, share: float,
+                           now: float = 0.0) -> float:
         """Set a workflow's fair-share weight / strict priority.
 
         Weights default to 1.0; zero means best-effort (ordered after all
         positive-share ready work each round, so it only gets capacity the
         positive-share tenants cannot use). May be set before the workflow
-        registers — shares are tenant policy, not DAG state. The share is
-        cleared when the workflow finishes and retires: re-declare it
-        before rerunning the same id.
+        registers — shares are tenant policy, not DAG state (an orphaned
+        pre-registration share reaps under the registration TTL). The
+        share is cleared when the workflow finishes and retires:
+        re-declare it before rerunning the same id. No coercion: a client
+        sending ``"2.5"`` or ``true`` has a bug the wire contract
+        promises to surface as 400, not paper over.
         """
-        if isinstance(share, bool) or not isinstance(share, (int, float)):
-            # no coercion: a client sending "2.5" or true has a bug the
-            # wire contract promises to surface as 400, not paper over
-            raise ValueError(f"share must be a number, got {share!r}")
-        share = float(share)
-        if not (0.0 <= share < float("inf")):
-            raise ValueError(f"share must be finite and >= 0, got {share!r}")
+        return self.apply(_cmd.SetShare(workflow_id, share), now)
+
+    def _apply_set_share(self, workflow_id: str, share: float,
+                         now: float) -> float:
         self.workflow_shares[workflow_id] = share
+        self._stamp_orphan_policy(workflow_id, now)
         self._mark_dirty(workflow_id)
         self._arm_preemption()                 # shares moved under running work
         return share
 
-    def set_arbiter(self, arbiter: str | Arbiter) -> Arbiter:
+    def set_arbiter(self, arbiter: str | Arbiter,
+                    now: float = 0.0) -> Arbiter:
         """Swap the inter-workflow arbitration policy."""
-        self.arbiter = (
-            make_arbiter(arbiter) if isinstance(arbiter, str) else arbiter
-        )
+        return self.apply(_cmd.SetArbiter(arbiter), now)
+
+    def _apply_set_arbiter(self, arbiter: Arbiter) -> Arbiter:
+        self.arbiter = arbiter
         self._arm_preemption()                 # the fairness regime changed
         return self.arbiter
 
     def set_workflow_quota(self, workflow_id: str,
                            max_running: Optional[int] = None,
-                           max_queued: Optional[int] = None) -> WorkflowQuota:
+                           max_queued: Optional[int] = None,
+                           now: float = 0.0) -> WorkflowQuota:
         """Set a tenant's queue quota (CWSI: PUT .../quota).
 
         Each bound is a non-negative integer or ``None`` (unlimited); as
@@ -587,26 +745,35 @@ class CommonWorkflowScheduler:
         the quota. ``max_running`` caps concurrently allocated launches
         (enforced at emission and at launch); ``max_queued`` caps queued
         tasks (enforced at submission — the CWSI answers 429). Quotas
-        retire with the workflow; re-declare before rerunning the id."""
-        def check(name: str, value: Optional[int]) -> Optional[int]:
-            if value is None:
-                return None
-            if isinstance(value, bool) or not isinstance(value, int):
-                raise ValueError(
-                    f"{name} must be a non-negative integer or null, "
-                    f"got {value!r}")
-            if value < 0:
-                raise ValueError(f"{name} must be >= 0, got {value!r}")
-            return value
+        retire with the workflow (orphaned pre-registration quotas reap
+        under the registration TTL); re-declare before rerunning the id."""
+        return self.apply(
+            _cmd.SetQuota(workflow_id, max_running, max_queued), now)
 
-        quota = WorkflowQuota(max_running=check("maxRunning", max_running),
-                              max_queued=check("maxQueued", max_queued))
+    def _apply_set_quota(self, workflow_id: str,
+                         max_running: Optional[int],
+                         max_queued: Optional[int],
+                         now: float) -> WorkflowQuota:
+        quota = WorkflowQuota(max_running=max_running, max_queued=max_queued)
         if quota.max_running is None and quota.max_queued is None:
             self.workflow_quotas.pop(workflow_id, None)
         else:
             self.workflow_quotas[workflow_id] = quota
+        self._stamp_orphan_policy(workflow_id, now)
         self._mark_dirty(workflow_id)
         return quota
+
+    def _stamp_orphan_policy(self, workflow_id: str, now: float) -> None:
+        """(Re-)stamp the orphan TTL after a share/quota change: policy
+        on an unregistered wid ages from its LAST declaration; policy on
+        a registered wid (or a wid whose policy just cleared) is owned by
+        retirement, not the TTL."""
+        self._orphan_policy.pop(workflow_id, None)
+        if workflow_id in self.dags:
+            return
+        if (workflow_id in self.workflow_shares
+                or workflow_id in self.workflow_quotas):
+            self._orphan_policy[workflow_id] = now
 
     def _running_count(self, workflow_id: str) -> int:
         """Live allocation count of one workflow, O(1) on the live path
@@ -795,7 +962,10 @@ class CommonWorkflowScheduler:
         token = strat.priority_token(ctx, self.dags.get(wid))
         if token is None:
             return None
-        cache_key = (id(strat), token, self._bucket_version.get(wid, 0))
+        # keyed by strategy NAME, not id(): a cached order must survive a
+        # pickle/unpickle recovery cycle (object ids do not), and a
+        # same-name different-object swap always pops the cache first
+        cache_key = (strat.name, token, self._bucket_version.get(wid, 0))
         hit = self._order_cache.get(wid)
         if hit is not None and hit[0] == cache_key:
             self.priority_cache_hits += 1
@@ -862,9 +1032,22 @@ class CommonWorkflowScheduler:
         return 0
 
     def schedule_pending(self, now: float) -> int:
-        """Run the deferred round, if any event requested one."""
+        """Run the deferred round, if any event requested one.
+
+        The no-op drain is checked BEFORE the command seam: drivers call
+        this after every event batch, and journaling millions of no-op
+        barriers would dwarf the real history. Only barriers that run a
+        round reach the journal (replay re-arrives at the same pending
+        state, so the recorded barrier drains identically)."""
         if not self._sched_pending:
             return 0
+        return self.apply(_cmd.ScheduleBarrier(force=False), now)
+
+    def _apply_schedule_barrier(self, force: bool, now: float) -> int:
+        if not force and not self._sched_pending:
+            return 0
+        # attribute lookup, not a direct call: benchmarks time rounds by
+        # monkeypatching an instance-level ``schedule`` closure
         return self.schedule(now)
 
     # ------------------------------------------------------------------
@@ -961,6 +1144,7 @@ class CommonWorkflowScheduler:
         self.workflow_quotas.pop(wid, None)
         self._preempt_debt.pop(wid, None)
         self._empty_regs.pop(wid, None)
+        self._orphan_policy.pop(wid, None)
         self._retired_readiness_ops += dag.readiness_ops
         self._retired_rank_ops += dag.rank_ops
         self._retired.pop(wid, None)               # refresh recency on re-run
@@ -979,6 +1163,10 @@ class CommonWorkflowScheduler:
     # ------------------------------------------------------------------
     def on_task_started(self, task_id: str, now: float,
                         launch_id: Optional[int] = None) -> None:
+        self.apply(_cmd.TaskStarted(task_id, launch_id), now)
+
+    def _apply_task_started(self, task_id: str, now: float,
+                            launch_id: Optional[int]) -> None:
         task = self._find_task(task_id)
         if task is None:
             return
@@ -998,6 +1186,11 @@ class CommonWorkflowScheduler:
 
     def on_task_finished(self, task_id: str, now: float, result: TaskResult,
                          launch_id: Optional[int] = None) -> None:
+        self.apply(_cmd.TaskFinished(task_id, result, launch_id), now)
+
+    def _apply_task_finished(self, task_id: str, now: float,
+                             result: TaskResult,
+                             launch_id: Optional[int]) -> None:
         task = self._find_task(task_id)
         if task is None:
             return
@@ -1064,7 +1257,7 @@ class CommonWorkflowScheduler:
         """
         self._sched_pending = False
         self.sched_rounds += 1
-        if self._empty_regs:
+        if self._empty_regs or self._orphan_policy:
             self._reap_registrations(now)
 
         def collect_ready() -> List[Task]:
@@ -1427,9 +1620,14 @@ class CommonWorkflowScheduler:
         inside the TTL — reaping is O(reaped), not O(registered).
         Tenant policy (shares, quotas, strategy overrides) reaps with
         the registration, exactly as retirement drops it: re-declare
-        before re-registering the id."""
+        before re-registering the id.
+
+        The second loop reaps *orphaned policy*: shares/quotas declared
+        for wids that never registered at all (``_orphan_policy``, same
+        insertion-order TTL scan). Without it every mistyped or
+        abandoned pre-registration policy entry persisted forever."""
         ttl = self.registration_ttl
-        if ttl is None or not self._empty_regs:
+        if ttl is None or not (self._empty_regs or self._orphan_policy):
             return 0
         reaped = 0
         while self._empty_regs:
@@ -1448,7 +1646,19 @@ class CommonWorkflowScheduler:
                 self._preempt_debt.pop(wid, None)
                 reaped += 1
         self.reaped_registrations += reaped
-        return reaped
+        reaped_policies = 0
+        while self._orphan_policy:
+            wid = next(iter(self._orphan_policy))
+            if now - self._orphan_policy[wid] < ttl:
+                break
+            del self._orphan_policy[wid]
+            if wid in self.dags:
+                continue       # registered since: retirement owns it now
+            self.workflow_shares.pop(wid, None)
+            self.workflow_quotas.pop(wid, None)
+            reaped_policies += 1
+        self.reaped_policies += reaped_policies
+        return reaped + reaped_policies
 
     # ------------------------------------------------------------------
     # completion paths
@@ -1676,6 +1886,8 @@ class CommonWorkflowScheduler:
             "preemptions": self.preemptions,
             "max_preemptions_per_round": self.max_preemptions_per_round,
             "reaped_registrations": self.reaped_registrations,
+            "reaped_policies": self.reaped_policies,
+            "journaled": self.journal is not None,
             "nodes": {n: s.up for n, s in self.nodes.items()},
             "workflows": {w: d.finished() for w, d in self.dags.items()},
             "running": len(self.allocations),
@@ -1717,4 +1929,5 @@ class CommonWorkflowScheduler:
             "preempt_rounds": self.preempt_rounds,
             "preempt_triggers": self.preempt_triggers,
             "reaped_registrations": self.reaped_registrations,
+            "reaped_policies": self.reaped_policies,
         }

@@ -20,13 +20,17 @@ import pytest
 from repro.cluster import ClusterSimulator, SimConfig
 from repro.cluster.nodes import cpu_node
 from repro.core import (
+    CWSIError,
+    CWSIHTTPServer,
     CWSIServer,
     CommonWorkflowScheduler,
     DataRef,
+    Journal,
     LotaruPredictor,
     Resources,
     TaskResult,
     TaskSpec,
+    http_transport,
 )
 
 GiB = 1 << 30
@@ -92,6 +96,7 @@ ENDPOINTS = [
     ("PUT", "/v1/workflow/{wid}/quota",
      {"maxRunning": 4, "maxQueued": 64}, 200),
     ("POST", "/v1/schedule", None, 200),
+    ("PUT", "/v1/clock", {"now": 1e9}, 200),
     ("GET", "/v1/arbiter", None, 200),
     ("PUT", "/v1/arbiter", {"arbiter": "fair_share"}, 200),
     ("GET", "/v1/stats", None, 200),
@@ -165,6 +170,8 @@ BAD_PATHS = [
     ("GET", "/v1/predict/runtime/x", 404),
     ("GET", "/v1/metrics", 404),
     ("GET", "/v1/arbiter/extra", 404),
+    ("GET", "/v1/clock", 404),              # read-back is via /stats
+    ("PUT", "/v1/clock/extra", 404),
     ("GET", "/v1/stats/extra", 404),
     ("GET", "/v1/stat", 404),
     ("PUT", "/v1/workflow/w0/share/extra", 404),
@@ -225,6 +232,16 @@ BAD_BODIES = [
     ("PUT", "/v1/workflow/w0/quota", {"nosuch": 1}, 400),
     ("PUT", "/v1/workflow/w0/quota", "quota", 400),
     ("PUT", "/v1/workflow/w0/quota", [1], 400),
+    # clock: the monotonic contract — non-numbers, bools, non-finite
+    # floats, and backwards moves are all 400s that change nothing
+    ("PUT", "/v1/clock", None, 400),
+    ("PUT", "/v1/clock", {}, 400),
+    ("PUT", "/v1/clock", {"now": "5"}, 400),
+    ("PUT", "/v1/clock", {"now": True}, 400),
+    ("PUT", "/v1/clock", {"now": float("nan")}, 400),
+    ("PUT", "/v1/clock", {"now": float("inf")}, 400),
+    ("PUT", "/v1/clock", {"now": -1.0}, 400),   # backwards from 0.0
+    ("PUT", "/v1/clock", "noon", 400),
     ("PUT", "/v1/arbiter", None, 400),
     ("PUT", "/v1/arbiter", {"arbiter": "nope"}, 400),
     ("PUT", "/v1/arbiter", {"arbiter": 7}, 400),
@@ -397,6 +414,65 @@ def test_max_queued_rejection_is_429_and_mutates_nothing(rig):
     assert cws.workflow_quotas == {}
     assert _req(server, "POST", "/v1/workflow/w0/task",
                 _task_body("w0.t1"))["status"] == 200
+
+
+def test_clock_only_moves_forward(rig):
+    sim, cws, server = rig
+    out = _req(server, "PUT", "/v1/clock", {"now": 5.0})
+    assert out["status"] == 200 and out["body"]["clock"] == 5.0
+    before = _snapshot(cws)
+    out = _req(server, "PUT", "/v1/clock", {"now": 4.0})
+    assert out["status"] == 400 and "backwards" in out["body"]["error"]
+    assert server.clock == 5.0
+    assert _snapshot(cws) == before
+    # equal time is a no-op, not an error (idempotent batch close)
+    assert _req(server, "PUT", "/v1/clock", {"now": 5.0})["status"] == 200
+    assert _req(server, "GET", "/v1/stats")["body"]["clock"] == 5.0
+    # the property setter enforces the same contract in-process
+    with pytest.raises(CWSIError, match="backwards"):
+        server.clock = 1.0
+
+
+@pytest.mark.parametrize("method,path,body,expect", BAD_BODIES,
+                         ids=[f"{m} {p} {json.dumps(b)[:30]}"
+                              for m, p, b, _ in BAD_BODIES])
+def test_errored_requests_never_reach_the_journal(tmp_path, method, path,
+                                                  body, expect):
+    """The write-ahead discipline over the wire: a request that errors
+    (and a read that succeeds) must append nothing to the journal."""
+    sim = ClusterSimulator([cpu_node("n0"), cpu_node("n1")], SimConfig(seed=0))
+    cws = CommonWorkflowScheduler(adapter=sim, strategy="rank_min_rr",
+                                  predictor=LotaruPredictor())
+    Journal(str(tmp_path / "wal.jsonl")).attach(cws)
+    sim.attach(cws)
+    server = CWSIServer(cws)
+    _req(server, "POST", "/v1/workflow/w0", {"name": "w0"})
+    seq = cws.journal.seq
+    out = _req(server, method, path, body)
+    assert out["status"] == expect, (method, path, body, out)
+    # every row is an error or a read: none may have journaled
+    assert cws.journal.seq == seq
+    cws.journal.close()
+
+
+def test_http_transport_shares_the_conformance_surface():
+    """The HTTP swap must be envelope-identical to the in-process seam:
+    replay the malformed-path and malformed-body tables through both and
+    compare the raw responses. (All rows are errors or reads, so the
+    double-issue cannot skew state.)"""
+    sim, cws, server = _rig()
+    _req(server, "POST", "/v1/workflow/w0", {"name": "w0"})
+    rows = ([(m, p, None) for m, p, _ in BAD_PATHS if p]   # '' has no HTTP form
+            + [(m, p, b) for m, p, b, _ in BAD_BODIES]
+            + [("get", "/v1/workflow/w0/state", None),     # method case
+               ("Put", "/v1/workflow/w0/share", {"share": 2.0})])
+    with CWSIHTTPServer(server) as httpd:
+        transport = http_transport(httpd.url)
+        for method, path, body in rows:
+            msg = json.dumps({"method": method, "path": path, "body": body})
+            direct = json.loads(server.handle(msg))
+            via_http = json.loads(transport(msg))
+            assert via_http == direct, (method, path, body)
 
 
 def test_share_and_arbiter_roundtrip(rig):

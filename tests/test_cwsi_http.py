@@ -1,0 +1,171 @@
+"""HTTP transport tests: the CWSI over a real socket.
+
+``CWSIHTTPServer`` + ``http_transport`` must be wire-identical to the
+in-process ``dumps``/``loads`` seam: same envelopes, same method-case
+semantics (the CWSI normalises, the transport passes verbatim), same
+error discipline — and a transport-level reject (malformed body JSON)
+must never reach the engine or its journal.
+"""
+import http.client
+import json
+import threading
+
+import pytest
+
+from repro.core import (
+    CWSIClient,
+    CWSIHTTPServer,
+    CWSIServer,
+    CommonWorkflowScheduler,
+    DataRef,
+    Journal,
+    Resources,
+    TaskSpec,
+    http_transport,
+)
+
+GiB = 1 << 30
+
+
+class _NullAdapter:
+    def launch(self, task, node, mem_alloc):
+        pass
+
+    def kill(self, task_id):
+        pass
+
+
+@pytest.fixture()
+def rig(tmp_path):
+    cws = CommonWorkflowScheduler(adapter=_NullAdapter())
+    Journal(str(tmp_path / "wal.jsonl")).attach(cws)
+    server = CWSIServer(cws)
+    with CWSIHTTPServer(server) as httpd:
+        yield cws, server, httpd, CWSIClient(
+            transport=http_transport(httpd.url))
+    cws.journal.close()
+
+
+def _spec(tid):
+    return TaskSpec(task_id=tid, name="proc",
+                    inputs=(DataRef(f"in-{tid}", GiB),),
+                    resources=Resources(cpus=1.0, mem_bytes=GiB),
+                    params={"sim": {"peak_mem": GiB // 2, "runtime": 5.0}})
+
+
+def _raw(httpd, method, path, body=b"", json_body=None):
+    """Issue a raw HTTP request (no client-side JSON discipline)."""
+    host, port = httpd.address
+    conn = http.client.HTTPConnection(host, port, timeout=10)
+    if json_body is not None:
+        body = json.dumps(json_body).encode()
+    conn.request(method, path, body=body or None,
+                 headers={"Content-Type": "application/json"})
+    resp = conn.getresponse()
+    payload = json.loads(resp.read())
+    conn.close()
+    assert resp.status == 200          # CWSI status lives in the envelope
+    return payload
+
+
+def test_round_trip_over_http(rig):
+    cws, server, httpd, client = rig
+    client.register_workflow("wf1", "demo")
+    client.set_share("wf1", 2.0)
+    client.submit_task("wf1", _spec("wf1.a"))
+    client.submit_task("wf1", _spec("wf1.b"), depends_on=("wf1.a",))
+    assert "wf1" in cws.dags
+    assert cws.workflow_shares == {"wf1": 2.0}
+    st = client.workflow_state("wf1")
+    assert len(st["tasks"]) == 2 and not st["finished"]
+    stats = _raw(httpd, "GET", "/v1/stats")["body"]
+    assert stats["journaled"] and stats["journalSeq"] == cws.journal.seq > 0
+
+
+def test_method_case_is_cwsi_semantics_not_transports(rig):
+    cws, server, httpd, client = rig
+    client.register_workflow("wf1", "demo")
+    # lowercase verb: the transport must pass it through and let the
+    # CWSI normalise (HTTP methods are case-insensitive on the wire)
+    env = _raw(httpd, "get", "/v1/workflow/wf1/state")
+    assert env["status"] == 200 and env["body"]["tasks"] == {}
+    # an unknown verb is the CWSI's 404, not a transport error
+    env = _raw(httpd, "BREW", "/v1/workflow/wf1")
+    assert env["status"] == 404
+
+
+def test_malformed_body_never_reaches_engine_or_journal(rig):
+    cws, server, httpd, client = rig
+    client.register_workflow("wf1", "demo")
+    seq = cws.journal.seq
+    ops = cws.op_counts()
+    env = _raw(httpd, "PUT", "/v1/workflow/wf1/share", body=b"{not json")
+    assert env["status"] == 400
+    assert "not valid JSON" in env["body"]["error"]
+    assert cws.journal.seq == seq            # nothing journaled
+    assert cws.op_counts() == ops            # nothing mutated
+    assert cws.workflow_shares == {}
+
+
+def test_unknown_path_is_404_and_never_journals(rig):
+    cws, server, httpd, client = rig
+    seq = cws.journal.seq
+    env = _raw(httpd, "POST", "/v1/no/such/route", json_body={"x": 1})
+    assert env["status"] == 404
+    env = _raw(httpd, "GET", "/v2/stats")
+    assert env["status"] == 400            # wrong interface version
+
+    assert cws.journal.seq == seq
+
+
+def test_cwsi_error_envelopes_cross_the_wire(rig):
+    cws, server, httpd, client = rig
+    client.register_workflow("wf1", "demo")
+    seq = cws.journal.seq
+    env = _raw(httpd, "PUT", "/v1/workflow/wf1/share",
+               json_body={"share": -3.0})
+    assert env["status"] == 400 and "share" in env["body"]["error"]
+    env = _raw(httpd, "PUT", "/v1/workflow/wf1/strategy",
+               json_body={"strategy": "no-such-strategy"})
+    assert env["status"] == 400
+    assert cws.journal.seq == seq            # errors never journal
+
+
+def test_backwards_clock_rejected_over_http(rig):
+    cws, server, httpd, client = rig
+    assert client.advance_clock(10.0) == 10.0
+    seq = cws.journal.seq
+    env = _raw(httpd, "PUT", "/v1/clock", json_body={"now": 5.0})
+    assert env["status"] == 400
+    assert "backwards" in env["body"]["error"]
+    assert server.clock == 10.0 and cws.journal.seq == seq
+    assert client.advance_clock(11.5) == 11.5
+
+
+def test_concurrent_writers_serialise_through_the_journal(rig):
+    cws, server, httpd, client = rig
+    n_threads, n_tasks = 8, 10
+    for i in range(n_threads):
+        client.register_workflow(f"wf{i}", "demo")
+    seq0 = cws.journal.seq
+    errors = []
+
+    def writer(i):
+        c = CWSIClient(transport=http_transport(httpd.url))
+        try:
+            for j in range(n_tasks):
+                c.submit_task(f"wf{i}", _spec(f"wf{i}.t{j}"))
+        except Exception as e:              # noqa: BLE001 — fail the test
+            errors.append(e)
+
+    threads = [threading.Thread(target=writer, args=(i,))
+               for i in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    # every submit journaled exactly once, under one writer lock
+    assert cws.journal.seq == seq0 + n_threads * n_tasks
+    for i in range(n_threads):
+        assert len(cws.dags[f"wf{i}"].tasks) == n_tasks

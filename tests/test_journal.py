@@ -1,0 +1,294 @@
+"""Write-ahead journal & crash-recovery tests.
+
+The oracle everywhere is *bit-identity*: a recovered engine must produce
+the same ``(task, node, start)`` decision trace and the same
+``op_counts()`` as the engine that never died. Three layers:
+
+* full-log replay and snapshot+tail recovery, across 3 strategies × 2
+  arbiters (mirrors the bench's ``recovery_traces_identical`` flag);
+* torn-tail handling — a crash mid-append must be ignored on recovery
+  and truncated on reattach;
+* a chaos harness: the reference journal is cut at ≥20 randomized kill
+  points (some byte-torn, some with a duplicated final delivery), the
+  engine is recovered at each cut and driven forward by re-applying the
+  reference tail — the combined launch sequence must equal the
+  reference's exactly (zero lost, zero duplicated launches).
+
+Journals attach *before* any mutation (including share declarations):
+pre-attach commands never reach the log — see journal.py's docstring.
+"""
+import json
+import os
+import random
+
+import pytest
+
+from repro.cluster import (
+    ClusterSimulator,
+    SimConfig,
+    build_workflow,
+    heterogeneous_cluster,
+)
+from repro.core import (
+    CommonWorkflowScheduler,
+    Journal,
+    LotaruPredictor,
+    read_commands,
+    recover,
+)
+from repro.core import commands as _cmd
+
+STRATEGIES = ["fifo_rr", "rank_min_rr", "bestfit"]
+ARBITERS = ["first_appearance", "fair_share"]
+
+
+def _trace(cws):
+    out = [[tr.task_id, tr.node, round(tr.start_time, 6)]
+           for tr in cws.provenance.task_traces if tr.state == "SUCCEEDED"]
+    out.sort(key=lambda e: (e[2], e[0]))
+    return out
+
+
+class _Recorder:
+    """Adapter wrapper: records every launch/kill in engine-issue order,
+    optionally delegating to a real adapter (the simulator)."""
+
+    def __init__(self, inner=None):
+        self.inner = inner
+        self.events = []
+
+    def launch(self, task, node, mem_alloc):
+        self.events.append(("launch", task.task_id, task.launch_id, node))
+        if self.inner is not None:
+            self.inner.launch(task, node, mem_alloc)
+
+    def kill(self, task_id):
+        self.events.append(("kill", task_id))
+        if self.inner is not None:
+            self.inner.kill(task_id)
+
+
+def _run_journaled(journal_path, strategy="rank_min_rr",
+                   arbiter="fair_share", snapshot_every=0, record=False):
+    """Two-tenant simulator scenario with the journal attached before any
+    mutation. Returns (cws, recorder-or-None)."""
+    sim = ClusterSimulator(heterogeneous_cluster(4), SimConfig(seed=42))
+    rec = _Recorder(sim) if record else None
+    cws = CommonWorkflowScheduler(adapter=rec or sim, strategy=strategy,
+                                  predictor=LotaruPredictor(),
+                                  arbiter=arbiter)
+    if journal_path:
+        Journal(journal_path, snapshot_every=snapshot_every).attach(cws)
+    cws.set_workflow_share("wf-a", 1.0)
+    cws.set_workflow_share("wf-b", 3.0)
+    sim.attach(cws)
+    for i, (wf, wid) in enumerate([("chipseq", "wf-a"),
+                                   ("viralrecon", "wf-b")]):
+        dag = build_workflow(wf, seed=5 + i, workflow_id=wid, n_samples=3)
+        sim.submit_workflow_at(0.0, dag)
+    sim.run()
+    return cws, rec
+
+
+@pytest.mark.parametrize("strategy", STRATEGIES)
+@pytest.mark.parametrize("arbiter", ARBITERS)
+def test_full_log_replay_is_bit_identical(tmp_path, strategy, arbiter):
+    jp = str(tmp_path / "wal.jsonl")
+    plain, _ = _run_journaled(None, strategy, arbiter)
+    live, _ = _run_journaled(jp, strategy, arbiter)
+    # journaling is decision-neutral...
+    assert _trace(live) == _trace(plain)
+    assert live.op_counts() == plain.op_counts()
+    # ...and replay is bit-identical
+    rec = recover(jp, journal=False)
+    assert _trace(rec) == _trace(live)
+    assert rec.op_counts() == live.op_counts()
+
+
+def test_recovery_smoke(tmp_path):
+    """Tier-1 smoke: journal → recover → identical, on the default combo."""
+    jp = str(tmp_path / "wal.jsonl")
+    live, _ = _run_journaled(jp)
+    rec = recover(jp, journal=False)
+    assert _trace(rec) == _trace(live) and _trace(rec)
+    assert rec.op_counts() == live.op_counts()
+    assert live.stats()["journaled"] and not rec.stats()["journaled"]
+
+
+def test_snapshot_compaction_and_recovery(tmp_path):
+    jp = str(tmp_path / "wal.jsonl")
+    live, _ = _run_journaled(jp, snapshot_every=50)
+    assert live.journal.snapshots >= 1
+    assert os.path.exists(jp + ".snap")
+    # compaction rewound the log: it restarts at a config record that
+    # names the seq the snapshot covers
+    first = json.loads(open(jp).readline())
+    assert first["seq"] == 0 and first["compactedTo"] > 0
+    assert sum(1 for _ in open(jp)) < live.journal.seq + 1
+    rec = recover(jp, journal=False)
+    assert _trace(rec) == _trace(live)
+    assert rec.op_counts() == live.op_counts()
+
+
+def test_torn_tail_is_ignored_and_truncated(tmp_path):
+    jp = str(tmp_path / "wal.jsonl")
+    live, _ = _run_journaled(jp)
+    live_seq = live.journal.seq
+    live.journal.close()                     # drops the mmap preallocation
+    clean = os.path.getsize(jp)
+    with open(jp, "ab") as fh:
+        fh.write(b'{"seq": 99999, "t": 1.0, "cmd": "task_fini')  # torn
+    rec = recover(jp, journal=True)
+    assert _trace(rec) == _trace(live)
+    assert rec.op_counts() == live.op_counts()
+    # reattach zeroed the wreckage and resumed the sequence; close
+    # truncates the preallocated segment back to the clean bytes
+    assert rec.journal.seq == live_seq
+    rec.journal.close()
+    assert os.path.getsize(jp) == clean
+
+
+def test_crash_padding_is_ignored(tmp_path):
+    """A crash leaves the preallocated mmap segment un-truncated: clean
+    entries, then NUL padding. Recovery must read it as a torn tail."""
+    jp = str(tmp_path / "wal.jsonl")
+    live, _ = _run_journaled(jp)
+    assert os.path.getsize(jp) % Journal.CHUNK == 0   # still preallocated
+    # recover WITHOUT closing the live journal — exactly the crash image
+    rec = recover(jp, journal=False)
+    assert _trace(rec) == _trace(live)
+    assert rec.op_counts() == live.op_counts()
+    live.journal.close()
+
+
+def test_empty_journal_refuses_recovery(tmp_path):
+    jp = str(tmp_path / "wal.jsonl")
+    open(jp, "w").close()
+    with pytest.raises(ValueError, match="nothing to recover"):
+        recover(jp)
+
+
+def test_errors_never_reach_the_journal(tmp_path):
+    jp = str(tmp_path / "wal.jsonl")
+    cws = CommonWorkflowScheduler(adapter=_Recorder())
+    Journal(jp).attach(cws)
+    cws.set_workflow_share("wf-a", 2.0)
+    seq = cws.journal.seq
+    lines = sum(1 for _ in open(jp))
+    with pytest.raises(ValueError):
+        cws.set_workflow_share("wf-a", -1.0)
+    with pytest.raises(ValueError):
+        cws.apply(_cmd.SetStrategy("wf-a", "no-such-strategy"), 0.0)
+    assert cws.journal.seq == seq
+    assert sum(1 for _ in open(jp)) == lines
+    assert cws.workflow_shares == {"wf-a": 2.0}
+
+
+def test_chaos_kill_points_zero_lost_zero_duplicated(tmp_path):
+    """Cut the reference journal at ≥20 randomized points and resume.
+
+    At each kill point k the engine is recovered from the truncated log
+    (replaying entries ≤ k re-issues their launches through a fresh
+    recording adapter) and then driven by re-applying the reference tail
+    (seq > k) — modelling the resource manager resuming its event feed.
+    The recorder's combined launch/kill sequence must equal the
+    uninterrupted run's exactly: nothing lost, nothing duplicated.
+    """
+    jp = str(tmp_path / "wal.jsonl")
+    live, ref_rec = _run_journaled(jp, record=True)
+    max_seq = live.journal.seq
+    live.journal.close()                     # drop the mmap preallocation
+    ref_trace, ref_ops = _trace(live), live.op_counts()
+    raw = [json.loads(line) for line in open(jp)]
+    tail_cmds = read_commands(jp)
+    assert max_seq > 40
+
+    rng = random.Random(7)
+    kill_points = sorted(rng.sample(range(1, max_seq), 20)) + [max_seq]
+    assert len(kill_points) >= 20
+    for i, k in enumerate(kill_points):
+        cut = str(tmp_path / f"cut-{k}.jsonl")
+        with open(cut, "w") as fh:
+            for rec in raw:
+                if "config" in rec or rec["seq"] <= k:
+                    fh.write(json.dumps(rec, sort_keys=True) + "\n")
+            if i % 3 == 0:
+                fh.write('{"seq": %d, "t": 0.0, "cmd": "tor' % (k + 1))
+        recorder = _Recorder()
+        eng = recover(cut, adapter=recorder, journal=False)
+        if i % 4 == 0:
+            # duplicated delivery: the resource manager replays the last
+            # pre-crash report once more — the engine must reject it
+            for seq, t, cmd in tail_cmds:
+                if seq == k and cmd.kind in ("task_started",
+                                             "task_finished"):
+                    eng.apply(cmd, t)
+        for seq, t, cmd in tail_cmds:
+            if seq > k:
+                eng.apply(cmd, t)
+        assert recorder.events == ref_rec.events, f"kill point {k}"
+        assert _trace(eng) == ref_trace, f"kill point {k}"
+        assert eng.op_counts() == ref_ops, f"kill point {k}"
+
+
+def test_wire_args_matches_to_json():
+    """The hand-built hot-path encodings must stay loads-equivalent to
+    the generic ``to_json()`` wire form (journal.py splices them in)."""
+    from repro.core import TaskResult
+    cases = [
+        _cmd.TaskStarted('w."quoted"\\id', launch_id=None),
+        _cmd.TaskStarted("w.t0", launch_id=7),
+        _cmd.TaskFinished("w.t0", TaskResult(True, peak_mem_bytes=1 << 30,
+                                             cpu_seconds=9.7), launch_id=3),
+        _cmd.TaskFinished("w.t1", TaskResult(False, oom=True,
+                                             reason='boom "x"\nnewline'),
+                          launch_id=None),
+        _cmd.TaskFinished("w.t2", TaskResult(True,
+                                             cpu_seconds=float("inf"))),
+        _cmd.ScheduleBarrier(force=True),
+        _cmd.ScheduleBarrier(force=False),
+        _cmd.SetShare("wf", 2.5),
+        _cmd.RegisterWorkflow("wf", "name"),
+        _cmd.SubmitWorkflow(build_workflow("chipseq", seed=1,
+                                           workflow_id="wf-x", n_samples=2)),
+        _cmd.SubmitWorkflow(_exotic_dag()),
+    ]
+    for cmd in cases:
+        assert json.loads(cmd.wire_args()) == cmd.to_json(), cmd
+        line = cmd.wire_line(7, b"1.25")
+        assert isinstance(line, bytes) and line.endswith(b"\n")
+        assert json.loads(line) == {"seq": 7, "t": 1.25, "cmd": cmd.kind,
+                                    "args": cmd.to_json()}, cmd
+
+
+def _exotic_dag():
+    """A DAG exercising every branch of SubmitWorkflow's hand-built wire
+    encoding: escapes, params, data refs, gang resources, edges."""
+    from repro.core.dag import DataRef, Resources, TaskSpec, WorkflowDAG
+    dag = WorkflowDAG('wf "q"', name="exotic\n")
+    dag.add_task(TaskSpec("a", "align", workflow_id='wf "q"',
+                          inputs=(DataRef("in.fa", 123),),
+                          outputs=(DataRef("out.bam", 0, "node-1"),),
+                          resources=Resources(cpus=2.5, mem_bytes=1 << 31,
+                                              chips=4, hbm_bytes_per_chip=7,
+                                              accelerator="tpu-v5e",
+                                              gang=True),
+                          params={"k": [1, "two", None]}))
+    dag.add_task(TaskSpec("b", "call", workflow_id='wf "q"'))
+    dag.add_dep("a", "b")
+    return dag
+
+
+def test_recovered_engine_keeps_journaling(tmp_path):
+    jp = str(tmp_path / "wal.jsonl")
+    cws = CommonWorkflowScheduler(adapter=_Recorder())
+    Journal(jp).attach(cws)
+    cws.set_workflow_share("wf-a", 2.0)
+    seq = cws.journal.seq
+    cws.journal.close()
+    rec = recover(jp)                       # journal=True: append mode
+    rec.set_workflow_share("wf-b", 1.0)
+    assert rec.journal.seq == seq + 1
+    rec.journal.close()
+    again = recover(jp, journal=False)
+    assert again.workflow_shares == {"wf-a": 2.0, "wf-b": 1.0}

@@ -668,3 +668,61 @@ def test_ttl_disabled_keeps_the_old_behaviour():
     cws.request_schedule(1e9)
     cws.schedule_pending(1e9)
     assert len(cws.dags) == 5
+
+
+def test_orphaned_policy_entries_are_reaped():
+    """Shares/quotas set for workflow ids that never register were the
+    remaining unbounded maps: they now ride the registration TTL."""
+    cws = CommonWorkflowScheduler(adapter=_NullAdapter(),
+                                  registration_ttl=100.0)
+    cws.add_node(NodeInfo("n0", cpus=4, mem_bytes=8 * GiB), now=0.0)
+    n = 30
+    for i in range(n):
+        cws.set_workflow_share(f"ghost-{i}", 2.0, now=float(i))
+        cws.set_workflow_quota(f"ghost-{i}", max_running=4, now=float(i))
+    # a tenant that DOES register keeps its policy
+    cws.set_workflow_share("live", 3.0, now=0.0)
+    cws.register_workflow("live", now=0.0)
+    cws.submit_task(TaskSpec(task_id="live.t0", name="p", workflow_id="live",
+                             resources=Resources(cpus=1.0, mem_bytes=GiB)),
+                    now=1.0)
+    assert len(cws.workflow_shares) == n + 1
+    assert len(cws.workflow_quotas) == n
+    cws.request_schedule(float(n) + 200.0)
+    cws.schedule_pending(float(n) + 200.0)
+    assert cws.workflow_shares == {"live": 3.0}
+    assert cws.workflow_quotas == {}
+    assert cws.reaped_policies == n
+    assert cws.op_counts()["reaped_policies"] == n
+    assert cws._orphan_policy == {}
+
+
+def test_orphan_policy_window_refreshes_and_registration_clears_it():
+    cws = CommonWorkflowScheduler(adapter=_NullAdapter(),
+                                  registration_ttl=10.0)
+    cws.add_node(NodeInfo("n0", cpus=4, mem_bytes=8 * GiB), now=0.0)
+    cws.set_workflow_share("w", 2.0, now=0.0)
+    # re-stating the policy within the TTL refreshes the window
+    cws.set_workflow_share("w", 2.5, now=9.0)
+    cws.request_schedule(15.0)
+    cws.schedule_pending(15.0)
+    assert cws.workflow_shares == {"w": 2.5}     # 15 - 9 < ttl
+    # registering adopts the policy: no longer an orphan, never reaped
+    cws.register_workflow("w", now=16.0)
+    cws.submit_task(TaskSpec(task_id="w.t0", name="p", workflow_id="w",
+                             resources=Resources(cpus=1.0, mem_bytes=GiB)),
+                    now=16.0)
+    cws.request_schedule(1000.0)
+    cws.schedule_pending(1000.0)
+    assert cws.workflow_shares == {"w": 2.5}
+    assert cws.reaped_policies == 0
+
+
+def test_orphan_policy_ttl_disabled_keeps_the_old_behaviour():
+    cws = CommonWorkflowScheduler(adapter=_NullAdapter(),
+                                  registration_ttl=None)
+    for i in range(5):
+        cws.set_workflow_share(f"g{i}", 1.0, now=0.0)
+    cws.request_schedule(1e9)
+    cws.schedule_pending(1e9)
+    assert len(cws.workflow_shares) == 5
