@@ -18,8 +18,15 @@ from .simulator import (  # noqa: F401
     run_workflows,
 )
 from .traces import (  # noqa: F401
+    Arrival,
     NF_CORE_TEMPLATES,
     NF_CORE_WORKFLOWS,
+    TraceReplayer,
     build_workflow,
+    burst_arrivals,
+    poisson_arrivals,
+    recorded_arrivals,
+    template_task_count,
+    trace_task_count,
     workflow_summary,
 )

@@ -20,7 +20,8 @@ import heapq
 import itertools
 import math
 import warnings
-from dataclasses import dataclass, field
+from bisect import insort
+from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import numpy as np
@@ -29,13 +30,165 @@ from ..core import commands as _cmd
 from ..core.dag import Task, TaskState, WorkflowDAG
 from ..core.scheduler import CommonWorkflowScheduler, NodeInfo, TaskResult
 
+# Events are plain tuples ``(time, seq, kind, payload)``: the seq is
+# globally unique, so tuple comparison decides on (time, seq) and never
+# reaches the unorderable payload — and C-speed tuple compares are what
+# both queue implementations sort by, keeping the (time, seq) total
+# order identical between them.
+_Event = Tuple[float, int, str, Dict[str, Any]]
 
-@dataclass(order=True)
-class _Event:
-    time: float
-    seq: int
-    kind: str = field(compare=False)
-    payload: Dict[str, Any] = field(compare=False, default_factory=dict)
+
+class _EventHeap:
+    """Baseline binary-heap event queue (the pre-wheel implementation,
+    kept for the wheel's bit-identity oracle and benchmarking)."""
+
+    __slots__ = ("_heap",)
+
+    def __init__(self) -> None:
+        self._heap: List[_Event] = []
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def push(self, ev: _Event) -> None:
+        heapq.heappush(self._heap, ev)
+
+    def pop(self) -> _Event:
+        return heapq.heappop(self._heap)
+
+    def peek_time(self) -> Optional[float]:
+        return self._heap[0][0] if self._heap else None
+
+
+class _TimeWheel:
+    """Calendar-queue event queue (Brown '88): amortized O(1) push/pop.
+
+    Events hash into width-``w`` time slots, slot → bucket modulo a
+    power-of-two bucket count; each bucket is kept sorted. A cursor walks
+    slots in increasing order, popping a bucket's head while the head
+    belongs to the cursor's slot, so a pop costs O(1) plus the rotation
+    to the next occupied slot. The bucket count tracks the resident
+    population (grow at 2x occupancy, shrink below 1/2x, width
+    re-estimated as queued-span / population) so rotations stay short;
+    a fruitless full rotation (population clustered far ahead of the
+    cursor) falls back to a direct min scan that teleports the cursor.
+
+    Bit-identity with the heap: pops follow the event tuples' own
+    (time, seq) order. Slot membership uses the SAME ``int(t / w)`` on
+    the push and pop sides, so float rounding can never disagree about
+    an event's slot; the cursor is always <= the global minimum's slot
+    (pops restore it, pushes clamp it), and slot number is monotone in
+    time, so the increasing-slot walk always surfaces the minimum first.
+    The one-event head lookahead keeps ``peek_time`` O(1) for the
+    driver's after-every-event batch-boundary check.
+    """
+
+    __slots__ = ("_buckets", "_mask", "_width", "_cursor", "_size", "_head")
+
+    _MIN_BUCKETS = 8
+    _MAX_BUCKETS = 1 << 20
+
+    def __init__(self) -> None:
+        self._buckets: List[List[_Event]] = [
+            [] for _ in range(self._MIN_BUCKETS)]
+        self._mask = self._MIN_BUCKETS - 1
+        self._width = 1.0
+        self._cursor = 0              # slot number (NOT bucket index)
+        self._size = 0                # events resident in buckets
+        self._head: Optional[_Event] = None   # global minimum, out-of-bucket
+
+    def __len__(self) -> int:
+        return self._size + (self._head is not None)
+
+    def peek_time(self) -> Optional[float]:
+        return self._head[0] if self._head is not None else None
+
+    def push(self, ev: _Event) -> None:
+        head = self._head
+        if head is None:
+            self._head = ev
+            return
+        if ev < head:                 # new global min: swap into the head
+            self._head = ev
+            ev = head
+        slot = int(ev[0] / self._width)
+        if slot < self._cursor:
+            self._cursor = slot
+        insort(self._buckets[slot & self._mask], ev)
+        self._size += 1
+        if self._size > 2 * (self._mask + 1) \
+                and self._mask + 1 < self._MAX_BUCKETS:
+            self._resize()
+
+    def pop(self) -> _Event:
+        ev = self._head
+        if ev is None:
+            raise IndexError("pop from an empty time wheel")
+        self._head = self._take_min() if self._size else None
+        return ev
+
+    def _take_min(self) -> _Event:
+        width = self._width
+        mask = self._mask
+        buckets = self._buckets
+        slot = self._cursor
+        for _ in range(mask + 1):
+            b = buckets[slot & mask]
+            if b and int(b[0][0] / width) <= slot:
+                self._cursor = slot
+                ev = b.pop(0)
+                break
+            slot += 1
+        else:
+            # fruitless full rotation: the minimum lives more than one
+            # wheel revolution ahead — take it directly (each bucket's
+            # head is its min) and teleport the cursor to its slot
+            best: Optional[_Event] = None
+            best_b: Optional[List[_Event]] = None
+            for b in buckets:
+                if b and (best is None or b[0] < best):
+                    best = b[0]
+                    best_b = b
+            assert best_b is not None
+            ev = best_b.pop(0)
+            self._cursor = int(ev[0] / width)
+        self._size -= 1
+        n = mask + 1
+        if n > self._MIN_BUCKETS and self._size < n // 2:
+            self._resize()
+        return ev
+
+    def _resize(self) -> None:
+        events: List[_Event] = []
+        for b in self._buckets:
+            events.extend(b)
+        n = self._MIN_BUCKETS
+        while n < len(events):
+            n <<= 1
+        n = min(n, self._MAX_BUCKETS)
+        if events:
+            tmin = min(ev[0] for ev in events)
+            tmax = max(ev[0] for ev in events)
+            span = tmax - tmin
+            if span > 0.0:
+                # width ~ mean gap: one resident event per slot on
+                # average, so rotations advance ~1 slot per pop
+                self._width = span / len(events)
+            self._cursor = int(tmin / self._width)
+        self._buckets = [[] for _ in range(n)]
+        self._mask = n - 1
+        width = self._width
+        mask = self._mask
+        for ev in events:
+            insort(self._buckets[int(ev[0] / width) & mask], ev)
+
+
+_EVENT_QUEUES = {"wheel": _TimeWheel, "heap": _EventHeap}
+
+# externally injected (finite-by-construction) event kinds: their
+# firing is progress for the stall-based livelock guard in ``run``
+_PROGRESS_KINDS = frozenset(
+    {"WF_SUBMIT", "CALL", "NODE_FAIL", "NODE_JOIN", "NODE_SLOW"})
 
 
 @dataclass
@@ -48,6 +201,7 @@ class SimConfig:
     staging_latency: float = 0.5           # container/pod start overhead (s)
     oom_check: bool = True
     speculation_period: float = 15.0       # how often to scan for stragglers
+    event_queue: str = "wheel"             # "wheel" | "heap" (bit-identical)
 
 
 class ClusterSimulator:
@@ -57,8 +211,20 @@ class ClusterSimulator:
         self.config = config or SimConfig()
         self.rng = np.random.default_rng(self.config.seed)
         self.now = 0.0
-        self._heap: List[_Event] = []
+        try:
+            self._queue = _EVENT_QUEUES[self.config.event_queue]()
+        except KeyError:
+            raise ValueError(
+                f"unknown event_queue {self.config.event_queue!r} "
+                f"(choose from {sorted(_EVENT_QUEUES)})") from None
         self._seq = itertools.count()
+        # deferred-round bookkeeping (engine decision_lag > 0): the one
+        # outstanding ROUND wakeup's instant, plus counters the tests and
+        # bench read — lag 0 must never defer (the tripwire)
+        self._round_wakeup: Optional[float] = None
+        self.round_deferrals = 0
+        self.round_wakeups = 0
+        self.events_processed = 0     # lifetime, across run() calls
         self._initial_nodes = list(nodes)
         self.cws: Optional[CommonWorkflowScheduler] = None
         # launch bookkeeping: task_id -> live launch generation
@@ -181,7 +347,7 @@ class ClusterSimulator:
 
     # ------------------------------------------------------------------
     def _push(self, time: float, kind: str, payload: Dict[str, Any]) -> None:
-        heapq.heappush(self._heap, _Event(time, next(self._seq), kind, payload))
+        self._queue.push((time, next(self._seq), kind, payload))
 
     def _live(self, gen: int) -> Optional[Task]:
         task = self._task_of_launch.get(gen)
@@ -191,47 +357,70 @@ class ClusterSimulator:
             return None   # superseded (retried/killed) launch
         return task
 
-    def run(self, until: float = math.inf, max_events: int = 10_000_000) -> float:
+    def run(self, until: float = math.inf,
+            max_events: Optional[int] = None,
+            stall_events: int = 1_000_000) -> float:
         """Drain the event loop; returns the final virtual time.
 
         Scheduling rounds are coalesced: event handlers only mark the
         engine pending (``request_schedule``), and one round runs per
         *virtual timestamp* once every same-time event has been applied —
         a W-wide same-timestamp completion burst costs one round, not W.
-        With ``sync_schedule=True`` engines the handlers schedule inline
-        and ``schedule_pending`` is a no-op, restoring the old cadence.
+        An engine with ``decision_lag > 0`` stretches the window across
+        timestamps: the pending round is deferred until its deadline
+        (first request + lag), absorbing every event in between; a ROUND
+        wakeup guarantees the deadline is reached even when the queue
+        holds nothing before it. With ``sync_schedule=True`` engines the
+        handlers schedule inline and ``schedule_pending`` is a no-op,
+        restoring the old cadence.
+
+        Liveness is guarded by *stall* accounting, not an absolute event
+        budget (the old hard ``max_events=10_000_000`` counted benign
+        SPEC_CHECK wakeups and task events alike, aborting legitimate
+        million-task replays): progress is a task settling for good
+        (``cws.tasks_settled`` — SUCCEEDED or terminal ERROR) or an
+        externally injected, finite-by-construction event (submission,
+        node churn, ``call_at`` hook); the run aborts once
+        ``stall_events`` events pass without either. A clean replay
+        settles a task every few events regardless of workload size,
+        while a genuine requeue livelock — launch/kill churn with
+        nothing ever settling — still trips the guard. Pass
+        ``max_events`` for the old absolute cap on top.
         """
         assert self.cws is not None, "attach() a scheduler first"
         cws = self.cws
         # work deferred before run() (e.g. CWSI batch submits) starts now
         cws.schedule_pending(self.now)
+        queue = self._queue
         n = 0
-        while self._heap and self._heap[0].time <= until:
+        stall = 0
+        settled = cws.tasks_settled
+        while queue and queue.peek_time() <= until:
             n += 1
-            if n > max_events:
+            if max_events is not None and n > max_events:
                 raise RuntimeError("simulator event budget exceeded (livelock?)")
-            ev = heapq.heappop(self._heap)
-            self.now = ev.time
+            _, _, kind, payload = ev = queue.pop()
+            self.now = ev[0]
 
-            if ev.kind == "TASK_START":
-                task = self._live(ev.payload["gen"])
+            if kind == "TASK_START":
+                task = self._live(payload["gen"])
                 if task is not None:
                     cws.apply(_cmd.TaskStarted(
-                        task.task_id, launch_id=ev.payload.get("lid")),
+                        task.task_id, launch_id=payload.get("lid")),
                         self.now)
 
-            elif ev.kind == "TASK_FINISH":
-                gen = ev.payload["gen"]
+            elif kind == "TASK_FINISH":
+                gen = payload["gen"]
                 task = self._live(gen)
                 if task is not None:
                     self._launch_gen.pop(task.task_id, None)
                     cws.apply(_cmd.TaskFinished(
-                        task.task_id, ev.payload["result"],
-                        launch_id=ev.payload.get("lid")), self.now)
+                        task.task_id, payload["result"],
+                        launch_id=payload.get("lid")), self.now)
                 self._retire(gen)
 
-            elif ev.kind == "NODE_FAIL":
-                node = ev.payload["node"]
+            elif kind == "NODE_FAIL":
+                node = payload["node"]
                 # drop in-flight events of launches on that node (only the
                 # node's unretired generations — not every launch ever made)
                 for gen in list(self._gens_on_node.get(node, ())):
@@ -242,20 +431,27 @@ class ClusterSimulator:
                     self._retire(gen)
                 cws.apply(_cmd.RemoveNode(node), self.now)
 
-            elif ev.kind == "NODE_JOIN":
-                cws.apply(_cmd.AddNode(ev.payload["info"]), self.now)
+            elif kind == "NODE_JOIN":
+                cws.apply(_cmd.AddNode(payload["info"]), self.now)
 
-            elif ev.kind == "NODE_SLOW":
-                cws.apply(_cmd.SetNodeSpeed(ev.payload["node"],
-                                            ev.payload["speed"]), self.now)
+            elif kind == "NODE_SLOW":
+                cws.apply(_cmd.SetNodeSpeed(payload["node"],
+                                            payload["speed"]), self.now)
 
-            elif ev.kind == "WF_SUBMIT":
-                cws.apply(_cmd.SubmitWorkflow(ev.payload["dag"]), self.now)
+            elif kind == "WF_SUBMIT":
+                cws.apply(_cmd.SubmitWorkflow(payload["dag"]), self.now)
 
-            elif ev.kind == "CALL":
-                ev.payload["fn"](self.now)
+            elif kind == "CALL":
+                payload["fn"](self.now)
 
-            elif ev.kind == "SPEC_CHECK":
+            elif kind == "ROUND":
+                # bare wakeup for a deferred round: the flush below sees
+                # the deadline reached. A stale wakeup (its round already
+                # ran earlier, pulled in by an intervening event batch)
+                # drains as a harmless no-op.
+                pass
+
+            elif kind == "SPEC_CHECK":
                 # only a round that can change anything: a speculative
                 # launch consumed resources (capacity/ready changes from
                 # other events already request their own rounds — an
@@ -263,20 +459,45 @@ class ClusterSimulator:
                 # wakeup for the whole run)
                 if cws.check_speculation(self.now):
                     cws.request_schedule(self.now)
-                # finished workflows retire out of cws.dags, so this
-                # re-arm scan is over live work only, not history
-                if any(not d.finished() for d in cws.dags.values()):
+                # O(1) re-arm: the engine maintains its unfinished-
+                # workflow set at the state transitions — the old
+                # ``any(not d.finished() for d in cws.dags.values())``
+                # scan here cost O(live workflows) per periodic wakeup
+                if cws.has_unfinished_work():
                     self._push(self.now + self.config.speculation_period,
                                "SPEC_CHECK", {})
 
+            if cws.tasks_settled != settled or kind in _PROGRESS_KINDS:
+                settled = cws.tasks_settled
+                stall = 0
+            else:
+                stall += 1
+                if stall > stall_events:
+                    raise RuntimeError(
+                        f"simulator stalled: {stall} events without a "
+                        f"task settling or external input (livelock?)")
+
             # same-timestamp batch drained (launches may re-arm the current
             # timestamp; the loop then drains and flushes it again) → run
-            # the single coalesced round for this instant
-            if not self._heap or self._heap[0].time > self.now:
-                cws.schedule_pending(self.now)
+            # the single coalesced round for this instant, or defer it to
+            # its micro-batching deadline
+            nt = queue.peek_time()
+            if (nt is None or nt > self.now) and cws._sched_pending:
+                deadline = cws._sched_deadline
+                if deadline <= self.now:      # decision_lag 0 always lands here
+                    cws.schedule_pending(self.now)
+                    self._round_wakeup = None
+                else:
+                    self.round_deferrals += 1
+                    if (nt is None or nt > deadline) \
+                            and self._round_wakeup != deadline:
+                        self._round_wakeup = deadline
+                        self.round_wakeups += 1
+                        self._push(deadline, "ROUND", {})
         # a round requested by the final batch (or by an `until` cutoff)
         # still runs at the last processed instant
         cws.schedule_pending(self.now)
+        self.events_processed += n
         return self.now
 
 

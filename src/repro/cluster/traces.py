@@ -18,10 +18,12 @@ CWSI exposes for learning.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import (Any, Callable, Dict, Iterable, Iterator, List, Mapping,
+                    Optional, Sequence, Tuple)
 
 import numpy as np
 
+from ..core import commands as _cmd
 from ..core.dag import DataRef, Resources, TaskSpec, WorkflowDAG
 
 GiB = 1 << 30
@@ -249,6 +251,200 @@ def build_workflow(template: str | WorkflowTemplate, seed: int = 0,
 
     dag.validate()
     return dag
+
+
+# ---------------------------------------------------------------------------
+# Trace replay: streamed workflow arrivals (the "heavy traffic" regime).
+#
+# The paper's companion proposal argues the CWSI must hold up under
+# *streams* of arriving workflows, not curated bursts. An arrival
+# schedule is a plain list of descriptors (cheap: no DAGs yet); the
+# replayer materialises each workflow's DAG lazily AT its arrival
+# instant and submits it through the engine's command seam, so resident
+# memory tracks live work — a million-task replay never holds a million
+# task objects at once.
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Arrival:
+    """One workflow arrival in a replayable trace (no DAG until it fires)."""
+
+    time: float
+    workflow_id: str
+    template: str
+    seed: int
+    n_samples: Optional[int] = None
+    share: Optional[float] = None       # tenant weight, declared pre-submit
+
+
+def poisson_arrivals(
+    n_workflows: int,
+    rate: float,
+    templates: Sequence[str] = NF_CORE_WORKFLOWS,
+    seed: int = 0,
+    n_samples: Optional[int] = None,
+    share_classes: Sequence[float] = (),
+) -> List[Arrival]:
+    """Poisson arrival process: i.i.d. exponential gaps at ``rate``/s.
+
+    Every workflow is its own tenant (fresh workflow id); templates cycle
+    through a seeded shuffle of ``templates`` and each arrival draws its
+    own ground-truth seed, so the whole trace is a pure function of
+    ``seed``. ``share_classes``, when given, assigns tenant weights
+    round-robin (e.g. ``(1.0, 2.0, 4.0)`` for three service classes).
+    """
+    if n_workflows <= 0:
+        raise ValueError(f"n_workflows must be positive, got {n_workflows!r}")
+    if not rate > 0:
+        raise ValueError(f"rate must be positive, got {rate!r}")
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / rate, size=n_workflows)
+    times = np.cumsum(gaps)
+    picks = rng.integers(0, len(templates), size=n_workflows)
+    seeds = rng.integers(0, 2**31 - 1, size=n_workflows)
+    out: List[Arrival] = []
+    for i in range(n_workflows):
+        tpl = templates[int(picks[i])]
+        out.append(Arrival(
+            time=float(times[i]),
+            workflow_id=f"{tpl}-r{seed}-{i:06d}",
+            template=tpl,
+            seed=int(seeds[i]),
+            n_samples=n_samples,
+            share=(share_classes[i % len(share_classes)]
+                   if share_classes else None),
+        ))
+    return out
+
+
+def burst_arrivals(
+    n_bursts: int,
+    burst_size: int,
+    period: float,
+    templates: Sequence[str] = NF_CORE_WORKFLOWS,
+    seed: int = 0,
+    n_samples: Optional[int] = None,
+    share_classes: Sequence[float] = (),
+) -> List[Arrival]:
+    """Periodic same-instant bursts (cron-shaped load): ``burst_size``
+    workflows land together every ``period`` seconds — the worst case for
+    same-timestamp coalescing and the best case for micro-batching."""
+    if n_bursts <= 0 or burst_size <= 0:
+        raise ValueError("n_bursts and burst_size must be positive")
+    if not period > 0:
+        raise ValueError(f"period must be positive, got {period!r}")
+    rng = np.random.default_rng(seed)
+    n = n_bursts * burst_size
+    picks = rng.integers(0, len(templates), size=n)
+    seeds = rng.integers(0, 2**31 - 1, size=n)
+    out: List[Arrival] = []
+    for i in range(n):
+        tpl = templates[int(picks[i])]
+        out.append(Arrival(
+            time=float((i // burst_size) * period),
+            workflow_id=f"{tpl}-b{seed}-{i:06d}",
+            template=tpl,
+            seed=int(seeds[i]),
+            n_samples=n_samples,
+            share=(share_classes[i % len(share_classes)]
+                   if share_classes else None),
+        ))
+    return out
+
+
+def recorded_arrivals(records: Iterable[Mapping[str, Any]]) -> List[Arrival]:
+    """Build a trace from recorded rows (e.g. a parsed JSON/CSV log):
+    each row needs ``time``/``workflow_id``/``template``/``seed`` and may
+    carry ``n_samples``/``share``. Rows are sorted by arrival time."""
+    out = [Arrival(
+        time=float(r["time"]),
+        workflow_id=str(r["workflow_id"]),
+        template=str(r["template"]),
+        seed=int(r["seed"]),
+        n_samples=(None if r.get("n_samples") is None
+                   else int(r["n_samples"])),
+        share=(None if r.get("share") is None else float(r["share"])),
+    ) for r in records]
+    out.sort(key=lambda a: a.time)
+    return out
+
+
+def template_task_count(template: str, n_samples: Optional[int] = None) -> int:
+    """Tasks one instantiation will submit (closed-form, no DAG built)."""
+    tpl = NF_CORE_TEMPLATES[template]
+    ns = n_samples or tpl.n_samples
+    total = 0
+    for stage in tpl.stages:
+        if stage.kind == "merge_all":
+            total += 1
+        elif stage.kind == "scatter":
+            total += ns * stage.scatter
+        else:
+            total += ns
+    return total
+
+
+def trace_task_count(arrivals: Sequence[Arrival]) -> int:
+    return sum(template_task_count(a.template, a.n_samples) for a in arrivals)
+
+
+class TraceReplayer:
+    """Streams an arrival schedule into a running simulation.
+
+    One ``call_at`` hook is in flight at a time: each arrival builds its
+    DAG (the expensive part) at its own virtual instant, declares the
+    tenant's share if the trace carries one, submits the workflow through
+    the engine's command seam, and chains the next arrival — so the
+    replayer holds O(1) pending state no matter how long the trace is,
+    and the event queue never sees the whole future schedule at once.
+
+    ``on_arrival(now, replayer)`` (if given) fires after every submission
+    — the probe benches use to sample resident-state gauges mid-replay.
+    """
+
+    def __init__(
+        self,
+        sim: Any,                      # ClusterSimulator (duck-typed)
+        arrivals: Iterable[Arrival],
+        build: Callable[..., WorkflowDAG] = build_workflow,
+        on_arrival: Optional[Callable[[float, "TraceReplayer"], None]] = None,
+    ) -> None:
+        self._sim = sim
+        self._arrivals: Iterator[Arrival] = iter(arrivals)
+        self._build = build
+        self._on_arrival = on_arrival
+        self.submitted_workflows = 0
+        self.submitted_tasks = 0
+        self.last_arrival_time = 0.0
+
+    def start(self) -> "TraceReplayer":
+        """Arm the first arrival (before ``sim.run()``)."""
+        self._chain_next()
+        return self
+
+    def _chain_next(self) -> None:
+        nxt = next(self._arrivals, None)
+        if nxt is None:
+            return
+        self._sim.call_at(nxt.time, lambda now, a=nxt: self._fire(a, now))
+
+    def _fire(self, arrival: Arrival, now: float) -> None:
+        cws = self._sim.cws
+        dag = self._build(arrival.template, seed=arrival.seed,
+                          workflow_id=arrival.workflow_id,
+                          n_samples=arrival.n_samples)
+        if arrival.share is not None:
+            cws.apply(_cmd.SetShare(arrival.workflow_id, arrival.share), now)
+        cws.apply(_cmd.SubmitWorkflow(dag), now)
+        self.submitted_workflows += 1
+        self.submitted_tasks += len(dag)
+        self.last_arrival_time = now
+        # chain AFTER submitting: the next arrival's event lands behind
+        # this instant's remaining events, keeping (time, seq) order
+        self._chain_next()
+        if self._on_arrival is not None:
+            self._on_arrival(now, self)
 
 
 def workflow_summary(dag: WorkflowDAG) -> Dict[str, float]:

@@ -361,6 +361,9 @@ class CWSIServer:
                 "preemptions": stats["preemptions"],
                 "reapedRegistrations": stats["reaped_registrations"],
                 "reapedPolicies": stats["reaped_policies"],
+                "decisionLag": stats["decision_lag"],
+                "tasksSettled": stats["tasks_settled"],
+                "unfinishedWorkflows": stats["unfinished_workflows"],
                 "journaled": stats["journaled"],
                 "journalSeq": (self.scheduler.journal.seq
                                if self.scheduler.journal is not None else 0),

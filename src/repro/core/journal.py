@@ -90,6 +90,8 @@ def engine_config(cws: CommonWorkflowScheduler) -> Dict[str, Any]:
         "usePredictedMemory": cws.use_predicted_memory,
         "legacyScan": cws.legacy_scan,
         "syncSchedule": cws.sync_schedule,
+        "decisionLag": cws.decision_lag,
+        "provenanceRetention": cws.provenance.retention,
         "maxPreemptionsPerRound": cws.max_preemptions_per_round,
         "retireFinished": cws.retire_finished,
         "retiredMax": cws.retired_max,
@@ -103,7 +105,8 @@ def _build_engine(config: Dict[str, Any], adapter: Any) -> CommonWorkflowSchedul
     return CommonWorkflowScheduler(
         adapter=adapter,
         strategy=config["strategy"],
-        provenance=ProvenanceStore(),
+        provenance=ProvenanceStore(
+            retention=config.get("provenanceRetention")),
         predictor=pred() if pred else None,
         mem_predictor=mem() if mem else None,
         enable_speculation=config.get("enableSpeculation", False),
@@ -113,6 +116,7 @@ def _build_engine(config: Dict[str, Any], adapter: Any) -> CommonWorkflowSchedul
         use_predicted_memory=config.get("usePredictedMemory", False),
         legacy_scan=config.get("legacyScan", False),
         sync_schedule=config.get("syncSchedule", False),
+        decision_lag=config.get("decisionLag", 0.0),
         arbiter=config["arbiter"],
         retire_finished=config.get("retireFinished", True),
         retired_max=config.get("retiredMax", 256),

@@ -9,7 +9,7 @@ queryable place and exports a W3C-PROV-shaped JSON document.
 from __future__ import annotations
 
 import json
-from collections import defaultdict
+from collections import defaultdict, deque
 from dataclasses import dataclass, field, asdict
 from typing import Any, Dict, Iterable, List, Optional, Tuple
 
@@ -50,6 +50,25 @@ class TaskTrace:
         return max(0, self.requested_mem_bytes - self.peak_mem_bytes)
 
 
+class _BoundedWindow:
+    """Picklable defaultdict factory for bounded trace windows (a lambda
+    closing over the retention bound would break engine snapshots)."""
+
+    __slots__ = ("maxlen",)
+
+    def __init__(self, maxlen: int) -> None:
+        self.maxlen = maxlen
+
+    def __call__(self) -> "deque[TaskTrace]":
+        return deque(maxlen=self.maxlen)
+
+    def __getstate__(self):
+        return self.maxlen
+
+    def __setstate__(self, state):
+        self.maxlen = state
+
+
 @dataclass
 class NodeEvent:
     node: str
@@ -68,41 +87,77 @@ class ProvenanceStore:
     honest: anything a predictor uses is available over the CWSI.
     """
 
-    def __init__(self) -> None:
-        self.task_traces: List[TaskTrace] = []
+    def __init__(self, retention: Optional[int] = None) -> None:
+        """``retention`` bounds the resident trace history: each of the
+        global, per-name and per-workflow trace windows keeps at most
+        that many records (oldest fall off first), so a million-task
+        replay's provenance memory is launch-bound, not history-bound.
+        Per-workflow summary aggregates (min submit, max successful end
+        — the exact running reductions ``makespan`` used to recompute
+        from the full list) are maintained regardless, so makespans stay
+        exact over the whole history even after the traces behind them
+        aged out. ``None`` (the default) retains everything, exactly the
+        pre-retention store."""
+        if retention is not None and retention <= 0:
+            raise ValueError(f"retention must be positive, got {retention!r}")
+        self.retention = retention
+        self.task_traces: List[TaskTrace] = (
+            [] if retention is None else deque(maxlen=retention))
         self.node_events: List[NodeEvent] = []
         self.workflows: Dict[str, Dict[str, Any]] = {}
-        self._by_name: Dict[str, List[TaskTrace]] = defaultdict(list)
-        self._by_workflow: Dict[str, List[TaskTrace]] = defaultdict(list)
+        if retention is None:
+            self._by_name: Dict[str, List[TaskTrace]] = defaultdict(list)
+            self._by_workflow: Dict[str, List[TaskTrace]] = defaultdict(list)
+        else:
+            self._by_name = defaultdict(_BoundedWindow(retention))
+            self._by_workflow = defaultdict(_BoundedWindow(retention))
+        self.recorded_tasks = 0                  # whole-history count
+        # wid -> min submit_time over every recorded trace (running min =
+        # the same float ``min()`` over the full list would produce)
+        self._wf_min_submit: Dict[str, float] = {}
+        # wid -> max end_time over SUCCEEDED traces
+        self._wf_max_end: Dict[str, float] = {}
 
     # ---------------- writes ----------------
     def register_workflow(self, workflow_id: str, meta: Dict[str, Any]) -> None:
         self.workflows[workflow_id] = dict(meta)
 
     def record_task(self, trace: TaskTrace) -> None:
+        self.recorded_tasks += 1
         self.task_traces.append(trace)
         self._by_name[trace.name].append(trace)
         self._by_workflow[trace.workflow_id].append(trace)
+        wid = trace.workflow_id
+        cur = self._wf_min_submit.get(wid)
+        if cur is None or trace.submit_time < cur:
+            self._wf_min_submit[wid] = trace.submit_time
+        if trace.state == "SUCCEEDED":
+            cur = self._wf_max_end.get(wid)
+            if cur is None or trace.end_time > cur:
+                self._wf_max_end[wid] = trace.end_time
 
     def record_node_event(self, ev: NodeEvent) -> None:
         self.node_events.append(ev)
 
     # ---------------- queries (CWSI provenance endpoints) ----------------
     def traces_for_name(self, name: str, succeeded_only: bool = True) -> List[TaskTrace]:
-        ts = self._by_name.get(name, [])
+        ts = self._by_name.get(name, ())
         if succeeded_only:
-            ts = [t for t in ts if t.state == "SUCCEEDED"]
-        return ts
+            return [t for t in ts if t.state == "SUCCEEDED"]
+        return list(ts)
 
     def traces_for_workflow(self, workflow_id: str) -> List[TaskTrace]:
         return list(self._by_workflow.get(workflow_id, []))
 
     def makespan(self, workflow_id: str) -> float:
-        ts = self._by_workflow.get(workflow_id, [])
-        done = [t for t in ts if t.state == "SUCCEEDED"]
-        if not done:
+        # O(1) from the running aggregates — the same reductions
+        # (max end over SUCCEEDED, min submit over all) the full-list
+        # scan computed, so values are bit-identical, and they survive
+        # the traces behind them aging out of a bounded window
+        end = self._wf_max_end.get(workflow_id)
+        if end is None:
             return 0.0
-        return max(t.end_time for t in done) - min(t.submit_time for t in ts)
+        return end - self._wf_min_submit[workflow_id]
 
     def total_queue_time(self, workflow_id: str) -> float:
         return sum(t.queue_s for t in self._by_workflow.get(workflow_id, []))
@@ -185,6 +240,8 @@ class ProvenanceStore:
         return {
             "workflows": len(self.workflows),
             "task_traces": len(self.task_traces),
+            "recorded_tasks": self.recorded_tasks,
+            "retention": self.retention,
             "node_events": len(self.node_events),
             "failures": len(self.failures()),
         }

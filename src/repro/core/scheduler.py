@@ -56,6 +56,7 @@ are expressed as multiple cooperating tasks.
 from __future__ import annotations
 
 import logging
+import math
 from dataclasses import dataclass, field, replace
 from typing import Any, Callable, Dict, List, Optional, Protocol, Tuple
 
@@ -252,6 +253,7 @@ class CommonWorkflowScheduler:
         use_predicted_memory: bool = False,
         legacy_scan: bool = False,
         sync_schedule: bool = False,
+        decision_lag: float = 0.0,
         arbiter: str | Arbiter = "first_appearance",
         retire_finished: bool = True,
         retired_max: int = 256,
@@ -321,6 +323,42 @@ class CommonWorkflowScheduler:
         self._sched_pending = False
         self.sched_round_events = 0    # schedule requests absorbed by rounds
         self.sched_rounds = 0
+        # --- cross-timestamp micro-batching (decision lag) ---
+        # With decision_lag > 0 a pending round may be deferred past its
+        # requesting instant: the FIRST request of a batch stamps a
+        # deadline (request time + lag) and the driver keeps absorbing
+        # later-timestamp events into the same round until the deadline
+        # passes — trading per-task decision latency (bounded by the lag)
+        # for fewer, larger rounds. 0.0 makes the deadline the request's
+        # own instant, which is exactly the same-timestamp-only coalescing
+        # above: decisions are bit-identical to the lag-free engine.
+        if not isinstance(decision_lag, (int, float)) \
+                or isinstance(decision_lag, bool) \
+                or not math.isfinite(decision_lag) or decision_lag < 0:
+            raise ValueError(
+                f"decision_lag must be a finite number >= 0, "
+                f"got {decision_lag!r}")
+        if decision_lag > 0 and sync_schedule:
+            raise ValueError(
+                "decision_lag requires coalesced rounds "
+                "(sync_schedule=True runs every round inline)")
+        self.decision_lag = float(decision_lag)
+        # earliest instant the pending round must run at (inf = no batch
+        # open); request_schedule keeps the MIN so a batch's deadline is
+        # anchored to its first request, not pushed out by later ones
+        self._sched_deadline = math.inf
+        # tasks settled for good (SUCCEEDED or terminal ERROR) — the
+        # drivers' liveness signal: a run making no settlements while
+        # events keep firing is requeue-churning, not progressing
+        self.tasks_settled = 0
+        # --- O(1) unfinished-work tracking ---
+        # wids of DAGs with unterminated tasks, maintained at the state
+        # transitions (submit adds, the last settlement removes, retire/
+        # reap/replace reconcile). Periodic drivers (the simulator's
+        # SPEC_CHECK re-arm) consult this instead of scanning every live
+        # DAG per wakeup — hundreds of tenants x periodic wakeups made
+        # that scan quadratic drag.
+        self._unfinished: Dict[str, None] = {}
         # engine-issued launch ids: on_task_started/on_task_finished reports
         # carrying a stale id (a dead launch racing its relaunch) are
         # rejected without the adapter needing its own generation masking
@@ -609,6 +647,8 @@ class CommonWorkflowScheduler:
             self._arm_preemption()             # a new tenant arrived
         self._empty_regs.pop(spec.workflow_id, None)
         self._orphan_policy.pop(spec.workflow_id, None)
+        # the accepted task is unterminated by construction
+        self._unfinished[spec.workflow_id] = None
         task.submit_time = now
         self._mark_dirty(spec.workflow_id)
         if schedule:
@@ -653,6 +693,10 @@ class CommonWorkflowScheduler:
             # the replaced DAG's preempted-work debt charges dead tasks
             self._preempt_debt.pop(dag.workflow_id, None)
         self.dags[dag.workflow_id] = dag
+        if dag.finished():                     # empty DAG: vacuously done
+            self._unfinished.pop(dag.workflow_id, None)
+        else:
+            self._unfinished[dag.workflow_id] = None
         self._orphan_policy.pop(dag.workflow_id, None)
         # an empty whole-DAG submission is registration-shaped: it ages
         # out under the TTL like a bare registration (re-submission with
@@ -823,6 +867,11 @@ class CommonWorkflowScheduler:
         if self.max_preemptions_per_round > 0:
             self._preempt_pending = True
             self._sched_pending = True
+            # run at the very next batch end regardless of decision_lag:
+            # a policy change under running work must not wait out a
+            # micro-batching window (and this path has no ``now`` to
+            # anchor one — -inf beats any later request's deadline)
+            self._sched_deadline = -math.inf
             self.preempt_triggers += 1
 
     def _invalidate_totals(self) -> None:
@@ -1029,7 +1078,19 @@ class CommonWorkflowScheduler:
         if self.sync_schedule:
             return self.schedule(now)
         self._sched_pending = True
+        # the batch's deadline anchors to its EARLIEST request: with
+        # decision_lag == 0 this is the request's own instant (the driver
+        # flushes at batch end exactly as before), with lag > 0 the
+        # driver may absorb events up to ``decision_lag`` newer first
+        deadline = now + self.decision_lag
+        if deadline < self._sched_deadline:
+            self._sched_deadline = deadline
         return 0
+
+    def has_unfinished_work(self) -> bool:
+        """O(1): any live workflow still has unterminated tasks. Periodic
+        drivers re-arm on this instead of scanning every DAG."""
+        return bool(self._unfinished)
 
     def schedule_pending(self, now: float) -> int:
         """Run the deferred round, if any event requested one.
@@ -1133,6 +1194,7 @@ class CommonWorkflowScheduler:
             return
         del self.dags[wid]
         self._dirty_dags.pop(wid, None)
+        self._unfinished.pop(wid, None)        # only finished wfs retire
         # per-workflow tenant policy retires with the workflow: keeping
         # strategy overrides and share weights for every id ever
         # scheduled would grow with history (the exact leak eviction
@@ -1256,6 +1318,7 @@ class CommonWorkflowScheduler:
         so scheduling decisions are identical.
         """
         self._sched_pending = False
+        self._sched_deadline = math.inf
         self.sched_rounds += 1
         if self._empty_regs or self._orphan_policy:
             self._reap_registrations(now)
@@ -1639,6 +1702,7 @@ class CommonWorkflowScheduler:
             if dag is not None and not dag.tasks:
                 del self.dags[wid]
                 self._dirty_dags.pop(wid, None)
+                self._unfinished.pop(wid, None)
                 self._evict_workflow_caches(wid)
                 self.workflow_strategies.pop(wid, None)
                 self.workflow_shares.pop(wid, None)
@@ -1686,6 +1750,7 @@ class CommonWorkflowScheduler:
 
     def _finish_success(self, task: Task, now: float, result: TaskResult) -> None:
         task.state = TaskState.SUCCEEDED
+        self.tasks_settled += 1
         # a task can be credited by a winning speculative copy while its
         # requeued original still sits READY and unplaced — drop it from
         # the queue or it would be launched again after succeeding
@@ -1723,6 +1788,7 @@ class CommonWorkflowScheduler:
         if dag.on_task_succeeded(task.task_id):
             self._mark_dirty(dag.workflow_id)
         if dag.finished():
+            self._unfinished.pop(dag.workflow_id, None)
             self._evict_workflow_caches(dag.workflow_id)
             if self.on_workflow_done is not None:
                 self.on_workflow_done(dag.workflow_id)
@@ -1750,6 +1816,7 @@ class CommonWorkflowScheduler:
             task.attempt += 1
         if task.attempt > task.spec.max_retries:
             task.state = TaskState.ERROR
+            self.tasks_settled += 1
             task.failure_reason = result.reason
             self.mem_allocated.pop(task.task_id, None)
             self._ready_discard(task.task_id, task.spec.workflow_id)
@@ -1759,6 +1826,7 @@ class CommonWorkflowScheduler:
             dag = self.dags[task.spec.workflow_id]
             dag.on_task_error(task.task_id)
             if dag.finished():
+                self._unfinished.pop(dag.workflow_id, None)
                 self._evict_workflow_caches(dag.workflow_id)
                 if self.on_workflow_done is not None:
                     self.on_workflow_done(dag.workflow_id)
@@ -1899,6 +1967,9 @@ class CommonWorkflowScheduler:
             "arbiter_rounds": self.arbiter_rounds,
             "sync_schedule": self.sync_schedule,
             "schedule_pending": self._sched_pending,
+            "decision_lag": self.decision_lag,
+            "tasks_settled": self.tasks_settled,
+            "unfinished_workflows": len(self._unfinished),
         }
 
     def op_counts(self) -> Dict[str, int]:
@@ -1930,4 +2001,6 @@ class CommonWorkflowScheduler:
             "preempt_triggers": self.preempt_triggers,
             "reaped_registrations": self.reaped_registrations,
             "reaped_policies": self.reaped_policies,
+            "tasks_settled": self.tasks_settled,
+            "unfinished_workflows": len(self._unfinished),
         }

@@ -487,3 +487,51 @@ def test_share_and_arbiter_roundtrip(rig):
     assert abs(sum(status["deficits"].values())) < 1e-9
     assert {"arbiterRounds", "placementProbes",
             "feasibilityChecks"} <= set(status)
+
+
+def test_orphan_policy_ttl_reaps_n_ghosts_over_the_wire(rig):
+    """The orphan share/quota TTL, exercised end to end over the CWSI.
+
+    A crashed client that declared tenant policy but never registered its
+    workflow must not leak that policy forever: N ghost shares/quotas age
+    out after ``registration_ttl``, the reap is visible in ``GET /stats``
+    (``reapedPolicies``), and a tenant that DOES register inside the TTL
+    keeps its pre-declared share. Regression for the unbounded
+    ``workflow_shares``/``workflow_quotas`` growth the TTL closed."""
+    sim, cws, server = rig
+    n_ghosts = 7
+    for i in range(n_ghosts):
+        out = _req(server, "PUT", f"/v1/workflow/ghost-{i}/share",
+                   {"share": 2.0})
+        assert out["status"] == 200
+        out = _req(server, "PUT", f"/v1/workflow/ghost-{i}/quota",
+                   {"maxRunning": 4, "maxQueued": 16})
+        assert out["status"] == 200
+    # a live tenant declares policy the same way, then actually registers
+    # AND submits work (registration alone is itself reaped after the TTL)
+    _req(server, "PUT", "/v1/workflow/survivor/share", {"share": 5.0})
+    assert _req(server, "POST", "/v1/workflow/survivor",
+                {"name": "survivor"})["status"] == 200
+    assert _req(server, "POST", "/v1/workflow/survivor/task",
+                _task_body("t-surv"))["status"] == 200
+
+    assert len(cws.workflow_shares) == n_ghosts + 1
+    assert len(cws.workflow_quotas) == n_ghosts
+
+    ttl = cws.registration_ttl
+    assert _req(server, "PUT", "/v1/clock",
+                {"now": ttl + 1.0})["status"] == 200
+    assert _req(server, "POST", "/v1/schedule")["status"] == 200
+
+    stats = _req(server, "GET", "/v1/stats")["body"]
+    assert stats["reapedPolicies"] == n_ghosts
+    assert stats["quotas"] == {}
+    # the ghosts' policy is gone; the registered tenant's share survives
+    assert cws.workflow_shares == {"survivor": 5.0}
+    assert all(f"ghost-{i}" not in cws.workflow_quotas
+               for i in range(n_ghosts))
+    # re-declaring after the reap starts a fresh TTL window (no tombstone
+    # blocks a reborn tenant)
+    out = _req(server, "PUT", "/v1/workflow/ghost-0/share", {"share": 1.5})
+    assert out["status"] == 200
+    assert cws.workflow_shares["ghost-0"] == 1.5

@@ -1,0 +1,329 @@
+"""Trace replay, micro-batching, and the scale-blocking guard rails.
+
+Covers the million-task-replay machinery at CI size: replayer
+determinism, ``decision_lag`` micro-batching (lag 0 must be bit-identical
+to the status quo, lag > 0 must actually defer rounds), the stall-based
+livelock guard (clean replays never trip it, genuine requeue churn still
+does), bounded provenance retention, and the O(1) unfinished-workflow
+gauge against its brute-force oracle.
+"""
+import math
+
+import pytest
+
+from repro.cluster import (
+    Arrival,
+    ClusterSimulator,
+    SimConfig,
+    TraceReplayer,
+    burst_arrivals,
+    build_workflow,
+    poisson_arrivals,
+    recorded_arrivals,
+    template_task_count,
+    trace_task_count,
+    uniform_cluster,
+)
+from repro.core import CommonWorkflowScheduler, LotaruPredictor
+from repro.core.dag import DataRef, Resources, TaskSpec, WorkflowDAG
+from repro.core.provenance import ProvenanceStore
+
+GiB = 1 << 30
+
+_ARRIVALS = dict(n_workflows=12, rate=0.05, seed=7, share_classes=(1.0, 2.0))
+
+
+def _replay(event_queue="wheel", arrivals=None, probe=None, n_nodes=12,
+            stall_events=1_000_000, provenance=None, **cws_kwargs):
+    sim = ClusterSimulator(uniform_cluster(n_nodes, cpus=8.0),
+                           SimConfig(seed=1, event_queue=event_queue))
+    cws = CommonWorkflowScheduler(adapter=sim, strategy="rank_min_rr",
+                                  predictor=LotaruPredictor(),
+                                  arbiter="fair_share",
+                                  provenance=provenance, **cws_kwargs)
+    sim.attach(cws)
+    rep = TraceReplayer(
+        sim, arrivals if arrivals is not None
+        else poisson_arrivals(**_ARRIVALS),
+        on_arrival=probe).start()
+    sim.run(stall_events=stall_events)
+    return sim, cws, rep
+
+
+def _trace(cws):
+    return sorted((t.task_id, t.node, round(t.start_time, 9))
+                  for t in cws.provenance.task_traces
+                  if t.state == "SUCCEEDED")
+
+
+# ---------------------------------------------------------------------------
+# arrival schedules
+# ---------------------------------------------------------------------------
+
+def test_poisson_trace_is_pure_function_of_seed():
+    a = poisson_arrivals(**_ARRIVALS)
+    b = poisson_arrivals(**_ARRIVALS)
+    c = poisson_arrivals(**dict(_ARRIVALS, seed=8))
+    assert a == b
+    assert a != c
+    assert [x.time for x in a] == sorted(x.time for x in a)
+    # every workflow is its own tenant, shares cycle through the classes
+    assert len({x.workflow_id for x in a}) == len(a)
+    assert [x.share for x in a[:4]] == [1.0, 2.0, 1.0, 2.0]
+
+
+def test_burst_arrivals_land_in_same_instant_groups():
+    arr = burst_arrivals(n_bursts=3, burst_size=5, period=60.0, seed=2)
+    assert len(arr) == 15
+    times = sorted({x.time for x in arr})
+    assert times == [0.0, 60.0, 120.0]
+    assert all(sum(1 for x in arr if x.time == t) == 5 for t in times)
+
+
+def test_recorded_arrivals_sorts_by_time():
+    rows = [
+        {"time": 9.0, "workflow_id": "w2", "template": "chipseq", "seed": 1},
+        {"time": 3.0, "workflow_id": "w1", "template": "rnaseq", "seed": 2,
+         "n_samples": 4, "share": 2.0},
+    ]
+    arr = recorded_arrivals(rows)
+    assert [a.workflow_id for a in arr] == ["w1", "w2"]
+    assert arr[0].n_samples == 4 and arr[0].share == 2.0
+    assert arr[1].n_samples is None and arr[1].share is None
+
+
+@pytest.mark.parametrize("template", ["rnaseq", "sarek", "mag", "ampliseq"])
+def test_template_task_count_matches_built_dag(template):
+    assert template_task_count(template) == len(build_workflow(template))
+    assert template_task_count(template, n_samples=3) == \
+        len(build_workflow(template, n_samples=3))
+
+
+def test_arrival_schedule_validation():
+    with pytest.raises(ValueError):
+        poisson_arrivals(0, rate=1.0)
+    with pytest.raises(ValueError):
+        poisson_arrivals(5, rate=0.0)
+    with pytest.raises(ValueError):
+        burst_arrivals(0, 1, 1.0)
+    with pytest.raises(ValueError):
+        burst_arrivals(1, 1, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# replayer
+# ---------------------------------------------------------------------------
+
+def test_replay_completes_and_counts_add_up():
+    arr = poisson_arrivals(**_ARRIVALS)
+    sim, cws, rep = _replay(arrivals=arr)
+    oc = cws.op_counts()
+    assert rep.submitted_workflows == len(arr)
+    assert rep.submitted_tasks == trace_task_count(arr)
+    assert oc["unfinished_workflows"] == 0
+    assert oc["tasks_settled"] >= rep.submitted_tasks
+
+
+def test_replay_is_deterministic():
+    _, cws_a, _ = _replay()
+    _, cws_b, _ = _replay()
+    ta, tb = _trace(cws_a), _trace(cws_b)
+    assert ta and ta == tb
+
+
+def test_replayer_fires_arrivals_in_order_one_at_a_time():
+    arr = poisson_arrivals(**_ARRIVALS)
+    seen = []
+
+    def probe(now, rep):
+        seen.append((now, rep.submitted_workflows))
+
+    sim, cws, rep = _replay(arrivals=arr, probe=probe)
+    assert [n for _, n in seen] == list(range(1, len(arr) + 1))
+    assert [t for t, _ in seen] == sorted(a.time for a in arr)
+
+
+# ---------------------------------------------------------------------------
+# decision_lag micro-batching
+# ---------------------------------------------------------------------------
+
+def test_lag0_wheel_and_heap_are_bit_identical_and_never_defer():
+    sim_w, cws_w, _ = _replay("wheel")
+    sim_h, cws_h, _ = _replay("heap")
+    assert _trace(cws_w) == _trace(cws_h)
+    assert cws_w.op_counts() == cws_h.op_counts()
+    # the tripwire: a lag-0 engine must never take the deferral branch
+    assert sim_w.round_deferrals == 0 and sim_w.round_wakeups == 0
+    assert sim_h.round_deferrals == 0 and sim_h.round_wakeups == 0
+
+
+def test_lag0_explicit_matches_engine_without_the_parameter():
+    _, cws_default, _ = _replay()
+    _, cws_lag0, _ = _replay(decision_lag=0.0)
+    assert _trace(cws_default) == _trace(cws_lag0)
+    assert cws_default.op_counts() == cws_lag0.op_counts()
+
+
+def test_decision_lag_defers_rounds_and_still_completes():
+    # bursts every period: with lag > 0 the round at each burst instant
+    # is deferred to its deadline, absorbing events in between
+    arr = burst_arrivals(n_bursts=4, burst_size=3, period=120.0, seed=3)
+    sim0, cws0, _ = _replay(arrivals=arr)
+    sim5, cws5, rep5 = _replay(arrivals=arr, decision_lag=5.0)
+    assert sim0.round_deferrals == 0
+    assert sim5.round_deferrals > 0
+    assert sim5.round_wakeups >= 1
+    oc = cws5.op_counts()
+    assert oc["unfinished_workflows"] == 0
+    assert oc["tasks_settled"] >= rep5.submitted_tasks
+    # micro-batching trades decision latency for fewer, fatter rounds
+    assert oc["rounds"] <= cws0.op_counts()["rounds"]
+
+
+def test_decision_lag_exposed_in_stats():
+    _, cws, _ = _replay(decision_lag=2.5,
+                        arrivals=poisson_arrivals(2, rate=0.1, seed=1))
+    st = cws.stats()
+    assert st["decision_lag"] == 2.5
+    assert st["tasks_settled"] == cws.tasks_settled
+    assert st["unfinished_workflows"] == 0
+
+
+@pytest.mark.parametrize("bad", [-1.0, math.nan, math.inf, True])
+def test_decision_lag_validation(bad):
+    with pytest.raises(ValueError):
+        CommonWorkflowScheduler(adapter=None, decision_lag=bad)
+
+
+def test_decision_lag_requires_coalesced_rounds():
+    with pytest.raises(ValueError, match="coalesced"):
+        CommonWorkflowScheduler(adapter=None, decision_lag=1.0,
+                                sync_schedule=True)
+    # lag 0 with sync_schedule stays legal (the status quo pairing)
+    CommonWorkflowScheduler(adapter=None, decision_lag=0.0,
+                            sync_schedule=True)
+
+
+# ---------------------------------------------------------------------------
+# livelock guard: stall accounting, not an absolute event budget
+# ---------------------------------------------------------------------------
+
+def _oom_livelock_sim(stall_events):
+    """One node, one task whose true peak exceeds the whole node: every
+    allocation (doubled each retry, capped at node memory) OOM-kills, the
+    requeue relaunches, nothing ever settles — a genuine livelock."""
+    sim = ClusterSimulator(uniform_cluster(1, cpus=4.0, mem_gib=4),
+                           SimConfig(seed=0))
+    cws = CommonWorkflowScheduler(adapter=sim, strategy="rank_min_rr")
+    sim.attach(cws)
+    dag = WorkflowDAG("wf-churn", "churn")
+    dag.add_task(TaskSpec(
+        task_id="wf-churn.hog", name="hog",
+        inputs=(DataRef("in:hog", GiB),),
+        resources=Resources(cpus=1.0, mem_bytes=GiB),
+        params={"sim": {"peak_mem": 8 * GiB}},   # > the 4 GiB node
+        base_runtime_s=10.0, max_retries=10**9), deps=[])
+    sim.submit_workflow_at(0.0, dag)
+    return sim
+
+
+def test_livelock_guard_trips_on_requeue_churn():
+    sim = _oom_livelock_sim(stall_events=500)
+    with pytest.raises(RuntimeError, match="stalled"):
+        sim.run(stall_events=500)
+
+
+def test_clean_replay_never_trips_the_guard():
+    # a legitimate replay settles tasks continuously: even a guard three
+    # orders of magnitude below the default never fires
+    sim, cws, rep = _replay(stall_events=1000)
+    assert cws.op_counts()["unfinished_workflows"] == 0
+
+
+def test_explicit_max_events_cap_still_available():
+    sim = _oom_livelock_sim(stall_events=10**9)
+    with pytest.raises(RuntimeError, match="budget"):
+        sim.run(max_events=50)
+
+
+# ---------------------------------------------------------------------------
+# bounded provenance: resident memory is launch-bound, history stays exact
+# ---------------------------------------------------------------------------
+
+def test_provenance_retention_bounds_resident_traces():
+    arr = poisson_arrivals(**_ARRIVALS)
+    _, unbounded, _ = _replay(arrivals=arr)
+    _, bounded, _ = _replay(arrivals=arr,
+                            provenance=ProvenanceStore(retention=64))
+    pv = bounded.provenance
+    assert len(pv.task_traces) == 64
+    assert pv.recorded_tasks == unbounded.provenance.recorded_tasks
+    assert pv.recorded_tasks >= trace_task_count(arr)
+    for name, window in pv._by_name.items():
+        assert len(window) <= 64
+    # makespans survive the traces behind them aging out — bit-identical
+    # to the unbounded store's full-list reductions
+    for a in arr:
+        assert pv.makespan(a.workflow_id) == \
+            unbounded.provenance.makespan(a.workflow_id)
+    assert pv.summary()["retention"] == 64
+
+
+def test_provenance_retention_validation():
+    with pytest.raises(ValueError):
+        ProvenanceStore(retention=0)
+    with pytest.raises(ValueError):
+        ProvenanceStore(retention=-5)
+
+
+def test_unbounded_store_is_the_status_quo():
+    pv = ProvenanceStore()
+    assert pv.retention is None
+    assert isinstance(pv.task_traces, list)
+
+
+# ---------------------------------------------------------------------------
+# O(1) unfinished-workflow gauge vs the brute-force oracle
+# ---------------------------------------------------------------------------
+
+def test_unfinished_gauge_matches_oracle_throughout_a_replay():
+    checks = []
+
+    def probe(now, rep):
+        cws = sim.cws
+        oracle = sum(1 for d in cws.dags.values() if not d.finished())
+        checks.append((cws.op_counts()["unfinished_workflows"], oracle))
+
+    sim = ClusterSimulator(uniform_cluster(8, cpus=8.0), SimConfig(seed=1))
+    cws = CommonWorkflowScheduler(adapter=sim, strategy="rank_min_rr",
+                                  predictor=LotaruPredictor())
+    sim.attach(cws)
+    arr = poisson_arrivals(10, rate=0.02, seed=4)
+    TraceReplayer(sim, arr, on_arrival=probe).start()
+    # extra mid-run probes between arrivals
+    for t in (50.0, 400.0, 900.0, 1500.0):
+        sim.call_at(t, lambda now: probe(now, None))
+    sim.run()
+    assert checks
+    assert all(g == o for g, o in checks), checks
+    assert cws.op_counts()["unfinished_workflows"] == 0
+    assert not cws.has_unfinished_work()
+
+
+def test_gauge_counts_terminal_error_workflows_as_finished():
+    sim = ClusterSimulator(uniform_cluster(1, cpus=4.0, mem_gib=4),
+                           SimConfig(seed=0))
+    cws = CommonWorkflowScheduler(adapter=sim, strategy="rank_min_rr")
+    sim.attach(cws)
+    dag = WorkflowDAG("wf-err", "err")
+    dag.add_task(TaskSpec(
+        task_id="wf-err.hog", name="hog",
+        inputs=(DataRef("in:hog", GiB),),
+        resources=Resources(cpus=1.0, mem_bytes=GiB),
+        params={"sim": {"peak_mem": 8 * GiB}},
+        base_runtime_s=10.0, max_retries=1), deps=[])
+    sim.submit_workflow_at(0.0, dag)
+    sim.run()
+    oc = cws.op_counts()
+    assert oc["unfinished_workflows"] == 0
+    assert oc["tasks_settled"] == 1        # terminal ERROR settles too

@@ -1,0 +1,231 @@
+"""Time-wheel event queue: bit-identity with the binary-heap oracle.
+
+The calendar queue replaces the flat heap on the simulator's hot path;
+its ONLY acceptable behavioural delta is speed. Every test here drives
+the wheel and the heap with the same operation sequence and demands the
+exact same pop order — unit-level over adversarial event mixes (same
+instant ties, far-future bursts, resize crossings, interleaved pops) and
+system-level over full simulations with node churn, ``call_at`` hooks
+and preemptive arbitration.
+"""
+import random
+
+import pytest
+
+from repro.cluster import (
+    ClusterSimulator,
+    SimConfig,
+    build_workflow,
+    heterogeneous_cluster,
+)
+from repro.cluster.simulator import _EventHeap, _TimeWheel
+from repro.core import CommonWorkflowScheduler, LotaruPredictor
+
+
+def _drain(q):
+    out = []
+    while len(q):
+        out.append(q.pop())
+    return out
+
+
+def _ev(t, seq, kind="E"):
+    return (t, seq, kind, {})
+
+
+# ---------------------------------------------------------------------------
+# unit-level identity
+# ---------------------------------------------------------------------------
+
+def _random_ops(rng, n_events):
+    """A mixed push/pop schedule with the gap shapes simulations produce:
+    dense same-instant ties, exponential gaps, and far-future bursts."""
+    seq = 0
+    t = 0.0
+    ops = []
+    live = 0
+    for _ in range(n_events):
+        r = rng.random()
+        if r < 0.55 or live == 0:
+            if rng.random() < 0.25:
+                pass                        # same-instant tie: reuse t
+            elif rng.random() < 0.1:
+                t += rng.expovariate(0.001)  # far-future burst
+            else:
+                t += rng.expovariate(1.0)
+            # some pushes land behind the clock (retries at current time)
+            push_t = t if rng.random() < 0.9 else max(0.0, t - rng.random())
+            ops.append(("push", _ev(push_t, seq)))
+            seq += 1
+            live += 1
+        else:
+            ops.append(("pop", None))
+            live -= 1
+    return ops
+
+
+@pytest.mark.parametrize("seed", range(25))
+def test_pop_order_matches_heap_randomized(seed):
+    rng = random.Random(seed)
+    wheel, heap = _TimeWheel(), _EventHeap()
+    for op, ev in _random_ops(rng, 400):
+        if op == "push":
+            wheel.push(ev)
+            heap.push(ev)
+        else:
+            assert wheel.peek_time() == heap.peek_time()
+            assert wheel.pop() == heap.pop()
+        assert len(wheel) == len(heap)
+    assert _drain(wheel) == _drain(heap)
+
+
+def test_same_instant_ties_pop_in_seq_order():
+    wheel = _TimeWheel()
+    evs = [_ev(5.0, s) for s in range(50)]
+    for ev in reversed(evs):                 # pushed in reverse seq order
+        wheel.push(ev)
+    assert _drain(wheel) == evs              # popped in seq order
+
+
+def test_grow_shrink_cycle_preserves_order():
+    # push far past the grow threshold (8 buckets * 2), drain below the
+    # shrink threshold, refill — order must survive both resizes
+    rng = random.Random(99)
+    evs = [_ev(rng.uniform(0, 1e6), s) for s in range(500)]
+    wheel, heap = _TimeWheel(), _EventHeap()
+    for ev in evs:
+        wheel.push(ev)
+        heap.push(ev)
+    for _ in range(480):
+        assert wheel.pop() == heap.pop()
+    more = [_ev(rng.uniform(0, 1e6), 500 + s) for s in range(300)]
+    for ev in more:
+        wheel.push(ev)
+        heap.push(ev)
+    assert _drain(wheel) == _drain(heap)
+
+
+def test_far_future_cluster_falls_back_to_direct_min():
+    # everything resident lives many wheel revolutions ahead of the
+    # cursor: the fruitless rotation must fall back to the direct min
+    # scan and still surface the global minimum
+    wheel = _TimeWheel()
+    wheel.push(_ev(0.0, 0))
+    evs = [_ev(1e9 + i * 1e7, 1 + i) for i in range(20)]
+    rng = random.Random(3)
+    shuffled = evs[:]
+    rng.shuffle(shuffled)
+    for ev in shuffled:
+        wheel.push(ev)
+    assert wheel.pop() == _ev(0.0, 0)
+    assert _drain(wheel) == evs
+
+
+def test_push_behind_cursor_is_popped_first():
+    # a retry pushed at/behind the current virtual time (slot below the
+    # cursor) must still pop before everything later
+    wheel = _TimeWheel()
+    for s in range(40):
+        wheel.push(_ev(100.0 + s, s))
+    for _ in range(20):
+        wheel.pop()                           # cursor now well past t=0
+    late = _ev(0.5, 1000)
+    wheel.push(late)
+    assert wheel.pop() == late
+
+
+def test_peek_and_len_and_empty_pop():
+    wheel = _TimeWheel()
+    assert wheel.peek_time() is None
+    assert len(wheel) == 0
+    with pytest.raises(IndexError):
+        wheel.pop()
+    wheel.push(_ev(2.0, 1))
+    wheel.push(_ev(1.0, 0))
+    assert wheel.peek_time() == 1.0
+    assert len(wheel) == 2
+
+
+def test_unknown_event_queue_rejected():
+    with pytest.raises(ValueError, match="event_queue"):
+        ClusterSimulator(heterogeneous_cluster(2),
+                         SimConfig(event_queue="bogus"))
+
+
+def test_hypothesis_pop_order_identity():
+    """Property-based variant when hypothesis is available (the
+    deterministic randomized trials above are the always-on fallback)."""
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    @hyp.given(st.lists(
+        st.tuples(st.floats(min_value=0, max_value=1e9,
+                            allow_nan=False, allow_infinity=False),
+                  st.booleans()),
+        max_size=200))
+    @hyp.settings(deadline=None, max_examples=200)
+    def prop(ops):
+        wheel, heap = _TimeWheel(), _EventHeap()
+        seq = 0
+        for t, is_pop in ops:
+            if is_pop and len(heap):
+                assert wheel.pop() == heap.pop()
+            else:
+                ev = _ev(t, seq)
+                seq += 1
+                wheel.push(ev)
+                heap.push(ev)
+            assert wheel.peek_time() == heap.peek_time()
+        assert _drain(wheel) == _drain(heap)
+
+    prop()
+
+
+# ---------------------------------------------------------------------------
+# system-level identity: full simulations, wheel vs heap
+# ---------------------------------------------------------------------------
+
+def _sim_trace(event_queue, seed=11):
+    """A deliberately eventful run: two tenants under preemptive fair
+    share, node failure + elastic re-join + slowdown, a mid-run share
+    flip via ``call_at``, and speculation armed."""
+    nodes = heterogeneous_cluster(4)
+    sim = ClusterSimulator(nodes, SimConfig(seed=seed,
+                                            event_queue=event_queue,
+                                            straggler_prob=0.05))
+    cws = CommonWorkflowScheduler(adapter=sim, strategy="rank_min_rr",
+                                  predictor=LotaruPredictor(),
+                                  arbiter="fair_share",
+                                  max_preemptions_per_round=2)
+    cws.set_workflow_share("wf-a", 1.0)
+    cws.set_workflow_share("wf-b", 3.0)
+    sim.attach(cws)
+    sim.submit_workflow_at(0.0, build_workflow("chipseq", seed=5,
+                                               workflow_id="wf-a",
+                                               n_samples=3))
+    sim.submit_workflow_at(10.0, build_workflow("viralrecon", seed=6,
+                                                workflow_id="wf-b",
+                                                n_samples=3))
+    sim.fail_node_at(120.0, nodes[0].name)
+    sim.join_node_at(300.0, nodes[0])
+    sim.slow_node_at(150.0, nodes[1].name, 0.4)
+    sim.call_at(60.0, lambda now: cws.set_workflow_share("wf-a", 8.0))
+    end = sim.run()
+    trace = sorted((t.task_id, t.attempt, t.node, round(t.start_time, 9),
+                    round(t.end_time, 9), t.state)
+                   for t in cws.provenance.task_traces)
+    return end, trace, cws.op_counts()
+
+
+def test_full_simulation_identical_under_wheel_and_heap():
+    end_w, trace_w, ops_w = _sim_trace("wheel")
+    end_h, trace_h, ops_h = _sim_trace("heap")
+    assert trace_w, "scenario produced no traces"
+    assert end_w == end_h
+    assert trace_w == trace_h
+    assert ops_w == ops_h
+
+
+def test_default_queue_is_the_wheel():
+    sim = ClusterSimulator(heterogeneous_cluster(2))
+    assert isinstance(sim._queue, _TimeWheel)
