@@ -84,6 +84,20 @@ re-asserts ``microbatch_lag0_traces_identical``,
 ``replay_wheel_heap_traces_identical``, ``replay_lag0_round_deferrals``
 and ``replay_peak_rss_launch_bound`` from the archived JSON.
 
+The **chaos sweep** pins the robustness layer (report leases, quarantine,
+exactly-once transport): a multi-tenant burst workload submitted over the
+CWSI wire through a ``ReliableCWSIClient`` on a ``FaultyTransport``
+(dropped/duplicated/reordered messages) while a seeded ``FaultPlan``
+injects a correlated failure-domain outage, a node flap, transient task
+failures and silently lost start/finish reports. Asserted: every
+workflow still succeeds with every task completed exactly once
+(``chaos_zero_lost_launches``, ``chaos_zero_duplicate_launches``), the
+chaos makespan stays within ``CHAOS_MAKESPAN_CEIL``× the fault-free one
+(``chaos_makespan_inflation_bounded``), the chaos run replays
+bit-identically, and an armed all-zero plan is bit-identical to no
+injector at all. CI re-asserts the three chaos flags from the archived
+JSON.
+
 ``BENCH_SMOKE=1`` shrinks every sweep to a CI-sized smoke (~seconds);
 results are also written to ``BENCH_sched_scale.json`` (override the
 path with ``BENCH_JSON``) so CI can archive the perf trajectory.
@@ -100,9 +114,14 @@ from typing import Any, Dict, List, Tuple
 
 from repro.cluster import (
     ClusterSimulator,
+    DomainOutage,
+    FaultPlan,
+    FaultyTransport,
+    NodeFlap,
     SimConfig,
     TraceReplayer,
     build_workflow,
+    domain_cluster,
     heterogeneous_cluster,
     poisson_arrivals,
     uniform_cluster,
@@ -110,9 +129,11 @@ from repro.cluster import (
 from repro.cluster.nodes import cpu_node
 from repro.cluster.simulator import _EventHeap, _TimeWheel
 from repro.core import (
+    CWSIServer,
     CommonWorkflowScheduler,
     Journal,
     LotaruPredictor,
+    ReliableCWSIClient,
     Resources,
     TaskSpec,
     WorkflowDAG,
@@ -223,6 +244,29 @@ RID_NODES = 64 if SMOKE else 200
 MICRO_LAGS = [0.0, 1.0, 5.0, 20.0]
 QUEUE_MICRO_N = 20_000 if SMOKE else 200_000
 QUEUE_US_PER_OP_CEIL = 25.0                   # wheel amortized push+pop
+
+# chaos sweep: the robustness layer under a seeded FaultPlan + faulty
+# transport (see module docstring); flags CI-asserted from the JSON
+CHAOS_TENANTS = 2 if SMOKE else 4
+CHAOS_WIDTH = 4 if SMOKE else 8
+CHAOS_STAGES = 3 if SMOKE else 6
+CHAOS_RUNTIME_S = 10.0
+CHAOS_LEASE_S = 30.0              # must exceed the longest task runtime
+# lost-report recovery is lease-tick quantized (a silently dead launch
+# costs up to two CHAOS_LEASE_S periods end to end), so the measured
+# inflation sits near 3x; the ceiling is a tripwire for recovery-path
+# regressions, not a tight bound
+CHAOS_MAKESPAN_CEIL = 4.0         # chaos / fault-free makespan bound
+CHAOS_PLAN = FaultPlan(
+    seed=7,
+    outages=(DomainOutage(40.0, "d0", duration=100.0),),
+    flaps=(NodeFlap(30.0, "d1n01", 45.0),),
+    transient_failure_prob=0.05,
+    drop_start_prob=0.02,
+    drop_finish_prob=0.03,
+)
+CHAOS_TRANSPORT = dict(drop_request_prob=0.05, drop_response_prob=0.05,
+                       duplicate_prob=0.05, delay_prob=0.5, seed=11)
 
 
 def _sweep(strategy: str, legacy: bool, n_workflows: int,
@@ -1119,6 +1163,140 @@ def _trace_replay(verbose: bool) -> Tuple[Dict[str, float], Dict[str, Any]]:
     return metrics, sweeps
 
 
+def _chaos_run(plan: Any, faulty: bool) -> Dict[str, Any]:
+    """One chaos run: a multi-tenant burst submitted over the CWSI wire
+    through the retrying client, with ``plan`` (or no injector when
+    None) armed against the simulator.
+
+    Returns the per-task SUCCEEDED counts, the full decision trace and
+    the end-state gauges the invariants are asserted on."""
+    nodes = domain_cluster(2, 3, cpus=16.0, mem_gib=128)
+    sim = ClusterSimulator(nodes, SimConfig(seed=7))
+    cws = CommonWorkflowScheduler(
+        adapter=sim, strategy="rank_min_rr", arbiter="fair_share",
+        report_lease=CHAOS_LEASE_S, quarantine_threshold=3,
+        retry_anti_affinity=True)
+    sim.attach(cws)
+    if plan is not None:
+        plan.injector().arm(sim, nodes)
+    server = CWSIServer(cws)
+    transport = (FaultyTransport(server.handle, **CHAOS_TRANSPORT)
+                 if faulty else server.handle)
+    client = ReliableCWSIClient(transport=transport, sleep=None,
+                                max_attempts=8)
+    expected = set()
+    for w in range(CHAOS_TENANTS):
+        wid = f"cwf{w}"
+        client.register_workflow(wid)
+        client.set_share(wid, float(1 + w % 3))
+        prev: List[str] = []
+        for s in range(CHAOS_STAGES):
+            cur = []
+            for i in range(CHAOS_WIDTH):
+                tid = f"{wid}.s{s}t{i}"
+                client.submit_task(
+                    wid,
+                    TaskSpec(task_id=tid, name=f"stage{s}",
+                             resources=Resources(cpus=1.0, mem_bytes=GiB),
+                             params={"sim": {"runtime": CHAOS_RUNTIME_S}}),
+                    depends_on=tuple(prev))
+                cur.append(tid)
+                expected.add(tid)
+            prev = cur
+    client.schedule_barrier()
+    sim.run()
+    if faulty:
+        transport.flush()          # land any still-held delayed duplicates
+    succeeded: Dict[str, int] = {}
+    for t in cws.provenance.task_traces:
+        if t.state == "SUCCEEDED":
+            succeeded[t.task_id] = succeeded.get(t.task_id, 0) + 1
+    states = [client.workflow_state(f"cwf{w}") if not faulty else
+              json.loads(server.handle(json.dumps(
+                  {"method": "GET", "path": f"/v1/workflow/cwf{w}/state",
+                   "body": None})))["body"]
+              for w in range(CHAOS_TENANTS)]
+    trace = sorted(
+        (t.task_id, t.attempt, t.state, t.node,
+         round(t.start_time, 9), round(t.end_time, 9))
+        for t in cws.provenance.task_traces)
+    return {
+        "expected": expected,
+        "succeeded": succeeded,
+        "trace": trace,
+        "makespan": sim.now,
+        "finished": all(s["finished"] for s in states),
+        "all_succeeded": all(s["succeeded"] for s in states),
+        "outstanding": len(sim._launch_gen) + len(cws._leases)
+        + len(cws.allocations),
+        "stats": cws.stats(),
+        "client": {"retries": client.retries, "gave_up": client.gave_up,
+                   "duplicate_acks": client.duplicate_acks},
+    }
+
+
+def _chaos_sweep(verbose: bool) -> Tuple[Dict[str, float], Dict[str, Any]]:
+    """The robustness flags: exactly-once completion under chaos, bounded
+    makespan inflation, deterministic replay, zero-plan identity."""
+    clean = _chaos_run(None, faulty=False)
+    zeroed = _chaos_run(FaultPlan(), faulty=False)
+    chaos = _chaos_run(CHAOS_PLAN, faulty=True)
+    replay = _chaos_run(CHAOS_PLAN, faulty=True)
+
+    assert clean["finished"] and clean["all_succeeded"]
+    zero_plan_identical = zeroed["trace"] == clean["trace"]
+    replay_identical = chaos["trace"] == replay["trace"]
+
+    lost = chaos["expected"] - set(chaos["succeeded"])
+    dupes = {t: n for t, n in chaos["succeeded"].items() if n != 1}
+    zero_lost = (not lost and chaos["finished"] and chaos["all_succeeded"]
+                 and chaos["outstanding"] == 0
+                 and chaos["client"]["gave_up"] == 0)
+    zero_dupes = not dupes
+    ratio = chaos["makespan"] / clean["makespan"]
+    bounded = ratio <= CHAOS_MAKESPAN_CEIL
+
+    st = chaos["stats"]
+    if verbose:
+        print(f"  chaos {CHAOS_TENANTS}x{CHAOS_WIDTH}x{CHAOS_STAGES}: "
+              f"makespan {chaos['makespan']:,.0f}s vs clean "
+              f"{clean['makespan']:,.0f}s ({ratio:.2f}x, ceil "
+              f"{CHAOS_MAKESPAN_CEIL:.1f}x)")
+        print(f"    lost={len(lost)} duplicated={len(dupes)} "
+              f"lease_expiries={st['lease_expiries']} "
+              f"quarantines={st['quarantines']} "
+              f"dedup_hits={st['duplicate_requests']} "
+              f"client_retries={chaos['client']['retries']}")
+        print(f"    replay identical: {replay_identical}  "
+              f"zero-plan identical: {zero_plan_identical}")
+    metrics = {
+        "chaos_zero_lost_launches": 1.0 if zero_lost else 0.0,
+        "chaos_zero_duplicate_launches": 1.0 if zero_dupes else 0.0,
+        "chaos_makespan_inflation_bounded": 1.0 if bounded else 0.0,
+        "chaos_makespan_ratio": ratio,
+        "chaos_replay_identical": 1.0 if replay_identical else 0.0,
+        "chaos_zero_plan_identical": 1.0 if zero_plan_identical else 0.0,
+        "chaos_lease_expiries": float(st["lease_expiries"]),
+        "chaos_dedup_hits": float(st["duplicate_requests"]),
+    }
+    sweeps = {
+        "clean_makespan_s": clean["makespan"],
+        "chaos_makespan_s": chaos["makespan"],
+        "client": chaos["client"],
+        "quarantines": st["quarantines"],
+        "quarantine_releases": st["quarantine_releases"],
+        "anti_affinity_redirects": st["anti_affinity_redirects"],
+    }
+    assert zero_lost, f"chaos lost launches: {sorted(lost)[:5]}"
+    assert zero_dupes, f"chaos duplicated launches: {dupes}"
+    assert bounded, (f"chaos makespan inflation {ratio:.2f}x exceeds "
+                     f"{CHAOS_MAKESPAN_CEIL:.1f}x")
+    assert replay_identical, "chaos run did not replay bit-identically"
+    assert zero_plan_identical, (
+        "an armed all-zero FaultPlan perturbed the fault-free traces")
+    return metrics, sweeps
+
+
 def _write_json(out: Dict[str, float], sweeps: Dict[str, Any],
                 elapsed_s: float) -> Path:
     """Machine-readable results next to the repo root (CI archives this
@@ -1180,6 +1358,7 @@ def run(verbose: bool = True) -> Tuple[float, Dict[str, float]]:
         ("journal", _keyed("journal", _journal_sweep)),
         ("node_scale", _keyed("node_scale", _node_scale)),
         ("trace_replay", _keyed("trace_replay", _trace_replay)),
+        ("chaos", _keyed("chaos", _chaos_sweep)),
     ]:
         try:
             fn()

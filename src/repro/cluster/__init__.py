@@ -2,10 +2,19 @@
 # cluster simulator (paper-methodology evaluation), nf-core-shaped traces,
 # and a real thread-pool executor driven by the same CWS engine.
 from .executor import LocalExecutor  # noqa: F401
+from .faults import (  # noqa: F401
+    DomainOutage,
+    FaultInjector,
+    FaultPlan,
+    FaultyTransport,
+    LaunchVerdict,
+    NodeFlap,
+)
 from .nodes import (  # noqa: F401
     GiB,
     TPU_V5E,
     cpu_node,
+    domain_cluster,
     heterogeneous_cluster,
     tpu_fleet,
     tpu_slice,

@@ -59,6 +59,22 @@ def uniform_cluster(n_nodes: int, cpus: float = 4.0, mem_gib: int = 32,
             for i in range(n_nodes)]
 
 
+def domain_cluster(n_domains: int, nodes_per_domain: int,
+                   cpus: float = 4.0, mem_gib: int = 32,
+                   key: str = "rack", prefix: str = "d") -> List[NodeInfo]:
+    """A homogeneous cluster partitioned into failure domains.
+
+    Node ``{prefix}{d}n{i}`` carries label ``{key: "{prefix}{d}"}``, so a
+    ``faults.DomainOutage`` on domain ``"{prefix}{d}"`` takes out all of
+    its ``nodes_per_domain`` members at one instant (the correlated-
+    failure case a per-node fault schedule cannot express)."""
+    return [
+        cpu_node(f"{prefix}{d}n{i:02d}", cpus, mem_gib,
+                 labels={key: f"{prefix}{d}"})
+        for d in range(n_domains) for i in range(nodes_per_domain)
+    ]
+
+
 def heterogeneous_cluster(n_nodes: int = 6, cpus: float = 8.0,
                           mem_gib: int = 32,
                           speed_spread: float = 0.3) -> List[NodeInfo]:

@@ -12,7 +12,14 @@ Faults modelled (all seeded & deterministic):
   * node crashes (running tasks requeued by the CWS) and elastic re-joins,
   * node-level slowdowns (contention → straggler mitigation kicks in),
   * per-task straggler noise (heavy-tailed runtime multiplier),
-  * OOM kills when the granted allocation < true peak memory.
+  * OOM kills when the granted allocation < true peak memory,
+  * declarative chaos plans (``faults.FaultPlan``): correlated
+    failure-domain outages, node flap, injected transient/permanent task
+    failures, and silently lost start/finish reports — the launch-level
+    faults arrive through ``fault_injector`` (set by
+    ``FaultInjector.arm``) from the plan's own seeded generator, so the
+    simulator's random stream is untouched and a run without a plan is
+    bit-identical to before the hook existed.
 """
 from __future__ import annotations
 
@@ -237,6 +244,9 @@ class ClusterSimulator:
         self._gens_on_node: Dict[str, set] = {}
         self.launches = 0
         self.kills = 0
+        # per-launch fault oracle (faults.FaultInjector.arm installs it);
+        # None means every launch runs and reports cleanly
+        self.fault_injector: Optional[Any] = None
 
     # ------------------------------------------------------------------
     def attach(self, cws: CommonWorkflowScheduler) -> None:
@@ -249,6 +259,8 @@ class ClusterSimulator:
             cws.apply(_cmd.AddNode(n), self.now)
         if cws.enable_speculation:
             self._push(self.now + self.config.speculation_period, "SPEC_CHECK", {})
+        if cws.report_lease is not None:
+            self._push(self.now + cws.report_lease, "LEASE_CHECK", {})
 
     # ---- ClusterAdapter protocol ----
     def launch(self, task: Task, node: str, mem_alloc: int) -> None:
@@ -294,6 +306,27 @@ class ClusterSimulator:
                                      reason="OOMKilled"),
             })
             return
+
+        if self.fault_injector is not None:
+            v = self.fault_injector.launch_faults(task)
+            if v.fail:
+                # injected failure, reported like any real one: the task
+                # dies partway through and the engine spends a retry
+                self._push(start, "TASK_START", {"gen": gen, "lid": lid})
+                self._push(start + runtime * v.fail_frac, "TASK_FINISH", {
+                    "gen": gen, "lid": lid,
+                    "result": TaskResult(False, peak_mem_bytes=mem_alloc // 2,
+                                         reason=v.reason),
+                })
+                return
+            if v.drop_start:
+                # silent loss at launch: neither report ever arrives, the
+                # generation stays live until a report lease reclaims it
+                return
+            if v.drop_finish:
+                # death mid-run: the start lands, then silence
+                self._push(start, "TASK_START", {"gen": gen, "lid": lid})
+                return
 
         cpu_eff = float(sim.get("cpu_utilisation", 0.8))
         self._push(start, "TASK_START", {"gen": gen, "lid": lid})
@@ -466,6 +499,15 @@ class ClusterSimulator:
                 if cws.has_unfinished_work():
                     self._push(self.now + self.config.speculation_period,
                                "SPEC_CHECK", {})
+
+            elif kind == "LEASE_CHECK":
+                # the engine journals a LeaseCheck command only when a
+                # lease or quarantine is actually due, so the periodic
+                # wakeup is journal-silent on clean runs
+                cws.lease_check(self.now)
+                if cws.has_unfinished_work() or len(queue) > 0:
+                    self._push(self.now + cws.report_lease,
+                               "LEASE_CHECK", {})
 
             if cws.tasks_settled != settled or kind in _PROGRESS_KINDS:
                 settled = cws.tasks_settled

@@ -25,6 +25,11 @@ from .arbiter import (  # noqa: F401
 )
 from . import commands  # noqa: F401
 from .cwsi import CWSI_VERSION, CWSIClient, CWSIError, CWSIServer  # noqa: F401
+from .cwsi_client import (  # noqa: F401
+    RETRYABLE_STATUSES,
+    ReliableCWSIClient,
+    TransportError,
+)
 from .cwsi_http import CWSIHTTPServer, http_transport  # noqa: F401
 from .journal import Journal, engine_config, read_commands, recover  # noqa: F401
 from .node_index import NodeCapacityIndex, NodeCaps  # noqa: F401

@@ -8,7 +8,7 @@ below and routed through ``CommonWorkflowScheduler.apply(cmd, now)``:
 
     validate(cmd)  →  journal.append(now, cmd)  →  cmd.run(engine, now)
 
-The set is CLOSED: these thirteen kinds are the whole mutation surface,
+The set is CLOSED: these fourteen kinds are the whole mutation surface,
 which is what makes the write-ahead journal (``journal.py``) a complete
 account of the engine — replaying a journal reproduces the engine bit
 for bit (same decision traces, same ``op_counts()``).
@@ -85,6 +85,11 @@ class Command:
     """Base of the closed command set (see module docstring)."""
 
     kind: ClassVar[str] = ""
+    # client-supplied exactly-once id (CWSI ``requestId``): commands the
+    # server builds for a mutating route carry it, apply() marks it in
+    # the engine's dedup window after the run, and it rides the journal
+    # wire so replay rebuilds the window. None everywhere else.
+    request_id: Optional[str] = None
 
     def validate(self, cws: Any) -> None:
         """Raise for a request the engine must reject.
@@ -213,19 +218,23 @@ class RegisterWorkflow(Command):
     workflow_id: str
     name: str = ""
     meta: Optional[Dict[str, Any]] = None
+    request_id: Optional[str] = None
 
     def run(self, cws: Any, now: float) -> Any:
         return cws._apply_register_workflow(self.workflow_id, self.name,
                                             self.meta, now)
 
     def to_json(self) -> Dict[str, Any]:
-        return {"workflowId": self.workflow_id, "name": self.name,
-                "meta": self.meta}
+        d: Dict[str, Any] = {"workflowId": self.workflow_id,
+                             "name": self.name, "meta": self.meta}
+        if self.request_id is not None:
+            d["requestId"] = self.request_id
+        return d
 
     @staticmethod
     def from_json(args: Dict[str, Any]) -> "RegisterWorkflow":
         return RegisterWorkflow(args["workflowId"], args.get("name", ""),
-                                args.get("meta"))
+                                args.get("meta"), args.get("requestId"))
 
 
 @dataclass
@@ -240,6 +249,7 @@ class SubmitTask(Command):
     spec: TaskSpec
     deps: Tuple[str, ...] = ()
     schedule: bool = False
+    request_id: Optional[str] = None
 
     def validate(self, cws: Any) -> None:
         # mirror of dag.add_task's checks (same exception types and
@@ -262,14 +272,19 @@ class SubmitTask(Command):
                                       schedule=self.schedule)
 
     def to_json(self) -> Dict[str, Any]:
-        return {"task": self.spec.to_json(), "dependsOn": list(self.deps),
-                "schedule": self.schedule}
+        d: Dict[str, Any] = {"task": self.spec.to_json(),
+                             "dependsOn": list(self.deps),
+                             "schedule": self.schedule}
+        if self.request_id is not None:
+            d["requestId"] = self.request_id
+        return d
 
     @staticmethod
     def from_json(args: Dict[str, Any]) -> "SubmitTask":
         return SubmitTask(TaskSpec.from_json(args["task"]),
                           tuple(args.get("dependsOn", ())),
-                          bool(args.get("schedule", False)))
+                          bool(args.get("schedule", False)),
+                          args.get("requestId"))
 
 
 @dataclass
@@ -363,6 +378,7 @@ class SetStrategy(Command):
     kind: ClassVar[str] = "set_strategy"
     workflow_id: str
     strategy: Any                               # registry name or Strategy
+    request_id: Optional[str] = None
 
     def validate(self, cws: Any) -> None:
         if isinstance(self.strategy, str):
@@ -376,11 +392,16 @@ class SetStrategy(Command):
     def to_json(self) -> Dict[str, Any]:
         name = (self.strategy if isinstance(self.strategy, str)
                 else self.strategy.name)
-        return {"workflowId": self.workflow_id, "strategy": name}
+        d: Dict[str, Any] = {"workflowId": self.workflow_id,
+                             "strategy": name}
+        if self.request_id is not None:
+            d["requestId"] = self.request_id
+        return d
 
     @staticmethod
     def from_json(args: Dict[str, Any]) -> "SetStrategy":
-        return SetStrategy(args["workflowId"], args["strategy"])
+        return SetStrategy(args["workflowId"], args["strategy"],
+                           args.get("requestId"))
 
 
 @dataclass
@@ -388,6 +409,7 @@ class SetShare(Command):
     kind: ClassVar[str] = "set_share"
     workflow_id: str
     share: Any
+    request_id: Optional[str] = None
 
     def validate(self, cws: Any) -> None:
         checked_share(self.share)
@@ -397,12 +419,16 @@ class SetShare(Command):
                                     checked_share(self.share), now)
 
     def to_json(self) -> Dict[str, Any]:
-        return {"workflowId": self.workflow_id,
-                "share": checked_share(self.share)}
+        d: Dict[str, Any] = {"workflowId": self.workflow_id,
+                             "share": checked_share(self.share)}
+        if self.request_id is not None:
+            d["requestId"] = self.request_id
+        return d
 
     @staticmethod
     def from_json(args: Dict[str, Any]) -> "SetShare":
-        return SetShare(args["workflowId"], args["share"])
+        return SetShare(args["workflowId"], args["share"],
+                        args.get("requestId"))
 
 
 @dataclass
@@ -411,6 +437,7 @@ class SetQuota(Command):
     workflow_id: str
     max_running: Any = None
     max_queued: Any = None
+    request_id: Optional[str] = None
 
     def validate(self, cws: Any) -> None:
         checked_quota_bound("maxRunning", self.max_running)
@@ -423,20 +450,24 @@ class SetQuota(Command):
             checked_quota_bound("maxQueued", self.max_queued), now)
 
     def to_json(self) -> Dict[str, Any]:
-        return {"workflowId": self.workflow_id,
-                "maxRunning": self.max_running,
-                "maxQueued": self.max_queued}
+        d: Dict[str, Any] = {"workflowId": self.workflow_id,
+                             "maxRunning": self.max_running,
+                             "maxQueued": self.max_queued}
+        if self.request_id is not None:
+            d["requestId"] = self.request_id
+        return d
 
     @staticmethod
     def from_json(args: Dict[str, Any]) -> "SetQuota":
         return SetQuota(args["workflowId"], args.get("maxRunning"),
-                        args.get("maxQueued"))
+                        args.get("maxQueued"), args.get("requestId"))
 
 
 @dataclass
 class SetArbiter(Command):
     kind: ClassVar[str] = "set_arbiter"
     arbiter: Any                                # registry name or Arbiter
+    request_id: Optional[str] = None
 
     def validate(self, cws: Any) -> None:
         if isinstance(self.arbiter, str):
@@ -450,11 +481,14 @@ class SetArbiter(Command):
     def to_json(self) -> Dict[str, Any]:
         name = (self.arbiter if isinstance(self.arbiter, str)
                 else self.arbiter.name)
-        return {"arbiter": name}
+        d: Dict[str, Any] = {"arbiter": name}
+        if self.request_id is not None:
+            d["requestId"] = self.request_id
+        return d
 
     @staticmethod
     def from_json(args: Dict[str, Any]) -> "SetArbiter":
-        return SetArbiter(args["arbiter"])
+        return SetArbiter(args["arbiter"], args.get("requestId"))
 
 
 # ---------------------------------------------------------------------------
@@ -577,19 +611,52 @@ class ScheduleBarrier(Command):
 
     kind: ClassVar[str] = "schedule_barrier"
     force: bool = False
+    request_id: Optional[str] = None
 
     def run(self, cws: Any, now: float) -> int:
         return cws._apply_schedule_barrier(self.force, now)
 
     def to_json(self) -> Dict[str, Any]:
-        return {"force": self.force}
+        d: Dict[str, Any] = {"force": self.force}
+        if self.request_id is not None:
+            d["requestId"] = self.request_id
+        return d
 
     def wire_args(self) -> str:
+        if self.request_id is not None:
+            return _encode(self.to_json())
         return '{"force":true}' if self.force else '{"force":false}'
 
     @staticmethod
     def from_json(args: Dict[str, Any]) -> "ScheduleBarrier":
-        return ScheduleBarrier(bool(args.get("force", False)))
+        return ScheduleBarrier(bool(args.get("force", False)),
+                               args.get("requestId"))
+
+
+# ---------------------------------------------------------------------------
+# the report-lease sweep
+# ---------------------------------------------------------------------------
+@dataclass
+class LeaseCheck(Command):
+    """Expire overdue report leases and lift elapsed quarantines.
+
+    Time-driven rather than request-driven, but journaled like every
+    other mutation so replay reproduces the exact requeue/quarantine
+    timeline. The engine's ``lease_check`` wrapper only applies it when
+    a lease or quarantine is actually due, so fault-free runs journal
+    nothing and stay byte-identical to before the feature existed."""
+
+    kind: ClassVar[str] = "lease_check"
+
+    def run(self, cws: Any, now: float) -> int:
+        return cws._apply_lease_check(now)
+
+    def to_json(self) -> Dict[str, Any]:
+        return {}
+
+    @staticmethod
+    def from_json(args: Dict[str, Any]) -> "LeaseCheck":
+        return LeaseCheck()
 
 
 # ---------------------------------------------------------------------------
@@ -600,7 +667,7 @@ COMMANDS: Dict[str, type] = {
         AddNode, RemoveNode, SetNodeSpeed,
         RegisterWorkflow, SubmitTask, SubmitWorkflow,
         SetStrategy, SetShare, SetQuota, SetArbiter,
-        TaskStarted, TaskFinished, ScheduleBarrier,
+        TaskStarted, TaskFinished, ScheduleBarrier, LeaseCheck,
     )
 }
 

@@ -98,6 +98,23 @@ Abandoned registrations are reaped: a workflow registered but never
 given tasks falls out of the engine after ``registration_ttl`` seconds
 (a later state query answers 404, like any unknown id).
 
+Exactly-once requests
+---------------------
+A client retrying a mutating call over a lossy transport cannot know
+whether the lost message died before or after the server acted on it.
+Any mutating request may therefore carry a client-chosen ``requestId``
+(non-empty string) in its body: the id travels *inside the journaled
+command*, the engine marks it in a bounded dedup window after the
+command runs, and a repeat of an already-applied id is acknowledged
+without re-executing (the body carries ``"duplicate": true``, or the
+original response when the server still has it cached). Because the
+marker rides the journal, crash recovery rebuilds the window and
+exactly-once survives a restart (the cached response does not — a
+post-recovery duplicate gets the generic duplicate-ack). Rejected
+requests (400/404/429) are never marked, so a retry after an error
+re-executes, as it must. ``core/cwsi_client.py`` packages the client
+side: ids stamped per call, timeout + exponential backoff + jitter.
+
 Every mutating route constructs a typed command record (``commands.py``)
 and applies it through the engine's single ``apply`` seam, so an engine
 with a write-ahead journal attached (``journal.py``) logs exactly the
@@ -159,6 +176,9 @@ class CWSIServer:
         # scheduling rounds triggered by the POST /schedule barrier (the
         # batch-close path for resource managers without a clock)
         self.barrier_rounds = 0
+        # requestId of the in-flight request, threaded into the command
+        # a mutating route constructs (exactly-once dedup)
+        self._request_id: Optional[str] = None
 
     @property
     def clock(self) -> float:
@@ -183,7 +203,28 @@ class CWSIServer:
     # transport entrypoint -------------------------------------------------
     def handle(self, raw_request: str) -> str:
         req = _Request.decode(raw_request)
+        rid: Optional[str] = None
         try:
+            if isinstance(req.body, dict) and "requestId" in req.body:
+                # exactly-once: the id is transport metadata, popped off
+                # before the route reads the body
+                rid = req.body.pop("requestId")
+                if not isinstance(rid, str) or not rid:
+                    raise CWSIError(
+                        400, "'requestId' must be a non-empty string")
+                seen = self.scheduler._seen_requests
+                if rid in seen:
+                    # already applied: acknowledge without re-executing
+                    # (the original envelope when still cached, else a
+                    # generic duplicate-ack — e.g. after crash recovery)
+                    self.scheduler.duplicate_requests += 1
+                    cached = seen[rid]
+                    if cached is not None:
+                        return cached
+                    return json.dumps({"status": 200,
+                                       "body": {"duplicate": True,
+                                                "requestId": rid}})
+                self._request_id = rid
             status, body = self._route(req)
         except CWSIError as e:
             status, body = e.code, {"error": str(e)}
@@ -195,7 +236,16 @@ class CWSIServer:
             status, body = 429, {"error": str(e)}
         except ValueError as e:
             status, body = 400, {"error": str(e)}
-        return json.dumps({"status": status, "body": body})
+        finally:
+            self._request_id = None
+        raw = json.dumps({"status": status, "body": body})
+        if (status == 200 and rid is not None
+                and rid in self.scheduler._seen_requests):
+            # the command ran and marked the id: cache the envelope so a
+            # duplicate can be answered verbatim (best-effort — evicted
+            # with the window, absent after recovery)
+            self.scheduler._seen_requests[rid] = raw
+        return raw
 
     # routing ---------------------------------------------------------------
     def _route(self, req: _Request) -> Tuple[int, Dict[str, Any]]:
@@ -217,7 +267,8 @@ class CWSIServer:
             # the server clock stamps the registration so abandoned
             # (never-submitted-to) registrations age out of the engine
             self.scheduler.apply(
-                _cmd.RegisterWorkflow(wid, meta.get("name", wid), meta),
+                _cmd.RegisterWorkflow(wid, meta.get("name", wid), meta,
+                                      request_id=self._request_id),
                 self.clock)
             return 200, {"workflowId": wid}
 
@@ -242,7 +293,8 @@ class CWSIServer:
             # running a round per submitted task; sync_schedule engines
             # still run the round inline) and replay-exact
             task = self.scheduler.apply(
-                _cmd.SubmitTask(spec, deps, schedule=True), self.clock)
+                _cmd.SubmitTask(spec, deps, schedule=True,
+                                request_id=self._request_id), self.clock)
             return 200, {"taskId": task.task_id, "state": task.state.value}
 
         if (method == "GET" and len(parts) == 5
@@ -255,9 +307,12 @@ class CWSIServer:
                 and parts[0] == "workflow" and parts[2] == "state"):
             dag = self.scheduler.dags.get(parts[1])
             if dag is not None:
+                finished = dag.finished()
+                succeeded = dag.succeeded()
                 return 200, {
-                    "finished": dag.finished(),
-                    "succeeded": dag.succeeded(),
+                    "finished": finished,
+                    "succeeded": succeeded,
+                    "failed": finished and not succeeded,
                     "tasks": {tid: t.state.value
                               for tid, t in dag.tasks.items()},
                 }
@@ -268,6 +323,7 @@ class CWSIServer:
             return 200, {
                 "finished": True,
                 "succeeded": retired.succeeded,
+                "failed": not retired.succeeded,
                 "tasks": dict(retired.task_states),
                 "retired": True,
             }
@@ -276,7 +332,9 @@ class CWSIServer:
             # explicit scheduling barrier for RMs without a clock: close
             # the current submit batch and run ONE coalesced round now
             launched = self.scheduler.apply(
-                _cmd.ScheduleBarrier(force=True), self.clock)
+                _cmd.ScheduleBarrier(force=True,
+                                     request_id=self._request_id),
+                self.clock)
             self.barrier_rounds += 1
             return 200, {"launched": launched,
                          "barrierRounds": self.barrier_rounds}
@@ -304,7 +362,9 @@ class CWSIServer:
                 raise CWSIError(400, "body must carry a 'strategy' name")
             # scoped to this workflow only — does NOT mutate the global
             # strategy other workflows are scheduled with
-            self.scheduler.apply(_cmd.SetStrategy(wid, name), self.clock)
+            self.scheduler.apply(
+                _cmd.SetStrategy(wid, name, request_id=self._request_id),
+                self.clock)
             return 200, {"workflowId": wid, "strategy": name}
 
         if (method == "PUT" and len(parts) == 3
@@ -314,7 +374,8 @@ class CWSIServer:
             if "share" not in body:
                 raise CWSIError(400, "body must carry a 'share' number")
             share = self.scheduler.apply(
-                _cmd.SetShare(wid, body["share"]), self.clock)
+                _cmd.SetShare(wid, body["share"],
+                              request_id=self._request_id), self.clock)
             return 200, {"workflowId": wid, "share": share}
 
         if (method == "PUT" and len(parts) == 3
@@ -330,7 +391,8 @@ class CWSIServer:
                     400, f"unknown quota fields: {sorted(unknown)}")
             quota = self.scheduler.apply(
                 _cmd.SetQuota(wid, body.get("maxRunning"),
-                              body.get("maxQueued")), self.clock)
+                              body.get("maxQueued"),
+                              request_id=self._request_id), self.clock)
             return 200, {"workflowId": wid,
                          "maxRunning": quota.max_running,
                          "maxQueued": quota.max_queued}
@@ -342,7 +404,9 @@ class CWSIServer:
             name = (req.body or {}).get("arbiter", "")
             if not isinstance(name, str):
                 raise CWSIError(400, "body must carry an 'arbiter' name")
-            arb = self.scheduler.apply(_cmd.SetArbiter(name), self.clock)
+            arb = self.scheduler.apply(
+                _cmd.SetArbiter(name, request_id=self._request_id),
+                self.clock)
             return 200, {"arbiter": arb.name}
 
         if method == "GET" and parts == ["stats"]:

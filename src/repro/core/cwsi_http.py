@@ -23,14 +23,26 @@ Semantics are deliberately thin:
   write-ahead ordering (append, then apply) must not interleave. Reads
   take the same lock — snapshot consistency is worth more than read
   concurrency at CWSI rates.
+* The transport defends its own threads. A mutating request without a
+  ``Content-Length`` (or with a negative/unparseable one) is a 400 —
+  the handler will not guess at framing. A declared length above
+  ``max_body_bytes`` is a 400 before a single body byte is read. With
+  ``read_timeout`` set, a stalled body is a 408 instead of a thread
+  parked forever on ``rfile.read`` (the stdlib default). With
+  ``max_inflight`` set, excess concurrent requests are shed with a 503
+  + ``Retry-After`` instead of queued without bound — the retrying
+  client (``cwsi_client.ReliableCWSIClient``) backs off and returns.
+  All transport-level rejects close the connection (the unread body
+  would poison keep-alive framing) and never reach the engine.
 """
 from __future__ import annotations
 
 import json
+import socket
 import threading
 import urllib.request
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
-from typing import Any, Callable, Optional, Tuple
+from typing import Any, Callable, Dict, Optional, Tuple
 
 from .cwsi import CWSIServer, _Request
 
@@ -41,16 +53,34 @@ class CWSIHTTPServer:
     ``port=0`` (the default) binds an ephemeral port; read ``address``
     (host, port) or ``url`` after construction. ``stop()`` shuts the
     listener down; the object is also a context manager.
+
+    ``max_inflight`` bounds concurrently handled requests (excess is
+    shed with 503 + ``Retry-After``), ``read_timeout`` bounds how long a
+    handler thread waits on a stalled request body (408), and
+    ``max_body_bytes`` caps the declared ``Content-Length`` (400). All
+    default to the historical unguarded behaviour except the body cap.
     """
 
     def __init__(self, server: CWSIServer, host: str = "127.0.0.1",
-                 port: int = 0) -> None:
+                 port: int = 0, max_inflight: Optional[int] = None,
+                 read_timeout: Optional[float] = None,
+                 max_body_bytes: int = 8 << 20) -> None:
         self.cwsi = server
         self._lock = threading.Lock()
+        self.max_body_bytes = int(max_body_bytes)
+        self._inflight = (threading.Semaphore(max_inflight)
+                          if max_inflight is not None else None)
+        self.shed_requests = 0       # 503: over max_inflight
+        self.rejected_bodies = 0     # 400: Content-Length missing/bad/huge
+        self.timed_out_requests = 0  # 408: body stalled past read_timeout
         outer = self
 
         class Handler(BaseHTTPRequestHandler):
             protocol_version = "HTTP/1.1"
+            # socketserver applies this to the connection socket, so a
+            # client that stalls mid-body (or mid-request-line) raises
+            # socket.timeout instead of parking the thread forever
+            timeout = read_timeout
 
             # Accept ANY method token (GET, put, PATCH, ...): the CWSI
             # owns method semantics, including normalising case and
@@ -62,8 +92,55 @@ class CWSIHTTPServer:
                 raise AttributeError(name)
 
             def _handle(self) -> None:
-                length = int(self.headers.get("Content-Length") or 0)
-                raw = self.rfile.read(length) if length else b""
+                if outer._inflight is not None \
+                        and not outer._inflight.acquire(blocking=False):
+                    # overload shedding: bounded in-flight work; the
+                    # excess is told when to come back, not queued
+                    outer.shed_requests += 1
+                    self._refuse(503, "server overloaded, retry later",
+                                 headers={"Retry-After": "1"})
+                    return
+                try:
+                    self._serve()
+                finally:
+                    if outer._inflight is not None:
+                        outer._inflight.release()
+
+            def _serve(self) -> None:
+                cl = self.headers.get("Content-Length")
+                if cl is None:
+                    if self.command.upper() in ("POST", "PUT", "PATCH"):
+                        # a mutating request without a declared length
+                        # could only be framed by chunked encoding
+                        # (unsupported) or connection close; reject
+                        # instead of guessing
+                        outer.rejected_bodies += 1
+                        self._refuse(400, "missing Content-Length")
+                        return
+                    length = 0
+                else:
+                    try:
+                        length = int(cl)
+                    except ValueError:
+                        length = -1
+                    if length < 0:
+                        outer.rejected_bodies += 1
+                        self._refuse(400, "invalid Content-Length")
+                        return
+                    if length > outer.max_body_bytes:
+                        outer.rejected_bodies += 1
+                        self._refuse(
+                            400, f"request body exceeds "
+                                 f"{outer.max_body_bytes} bytes")
+                        return
+                try:
+                    raw = self.rfile.read(length) if length else b""
+                except socket.timeout:
+                    # stalled body: free the thread with a 408 instead
+                    # of blocking on the remaining bytes indefinitely
+                    outer.timed_out_requests += 1
+                    self._refuse(408, "timed out reading request body")
+                    return
                 body: Optional[Any] = None
                 if raw:
                     try:
@@ -81,11 +158,23 @@ class CWSIHTTPServer:
                     resp = outer.cwsi.handle(message)
                 self._reply(json.loads(resp))
 
-            def _reply(self, envelope: Any) -> None:
+            def _refuse(self, status: int, error: str,
+                        headers: Optional[Dict[str, str]] = None) -> None:
+                # transport-level reject with an unread (or unreadable)
+                # body on the wire: keep-alive framing is gone, so the
+                # connection closes with the response
+                self.close_connection = True
+                self._reply({"status": status, "body": {"error": error}},
+                            headers=headers)
+
+            def _reply(self, envelope: Any,
+                       headers: Optional[Dict[str, str]] = None) -> None:
                 payload = json.dumps(envelope).encode()
                 self.send_response(200)
                 self.send_header("Content-Type", "application/json")
                 self.send_header("Content-Length", str(len(payload)))
+                for k, v in (headers or {}).items():
+                    self.send_header(k, v)
                 self.end_headers()
                 self.wfile.write(payload)
 

@@ -27,10 +27,12 @@ class TaskState(str, Enum):
     FAILED = "FAILED"            # attempt failed; may be retried
     KILLED = "KILLED"            # preempted / speculative loser
     ERROR = "ERROR"              # permanently failed (retries exhausted)
+    CANCELLED = "CANCELLED"      # never ran: an ancestor failed permanently
 
     @property
     def terminal(self) -> bool:
-        return self in (TaskState.SUCCEEDED, TaskState.ERROR)
+        return self in (TaskState.SUCCEEDED, TaskState.ERROR,
+                        TaskState.CANCELLED)
 
     @property
     def active(self) -> bool:
@@ -157,6 +159,10 @@ class Task:
     # requeue); suffixes cached priority keys so key ties resolve exactly
     # as the stable per-round sort did
     ready_seq: int = 0
+    # one-shot anti-affinity veto: the node this task's previous launch
+    # died on (set on requeue when the engine's retry_anti_affinity is
+    # on, cleared at the next launch whether honoured or not)
+    avoid_node: Optional[str] = None
 
     @property
     def task_id(self) -> str:
@@ -397,6 +403,36 @@ class WorkflowDAG:
         ERROR (ERROR is terminal, so at most once per task).
         """
         self._n_unterminated -= 1
+
+    def cancel_descendants(self, task_id: str) -> List[str]:
+        """Cancel every descendant of a permanently failed task.
+
+        Each descendant of a non-SUCCEEDED task still holds an unmet
+        dependency on it, so it is provably PENDING — CANCELLED is the
+        only terminal state it can ever reach. Without this the workflow
+        wedges: ``finished()`` counts the descendants as unterminated
+        forever. Returns the cancelled ids in deterministic BFS
+        (edge-insertion) order; must be called exactly once per task
+        that enters ERROR, before ``finished()`` is consulted.
+        """
+        cancelled: List[str] = []
+        seen: Set[str] = {task_id}
+        frontier = deque([task_id])
+        while frontier:
+            for child in self.children[frontier.popleft()]:
+                if child in seen:
+                    continue
+                seen.add(child)
+                frontier.append(child)
+                task = self.tasks[child]
+                if task.state != TaskState.PENDING:
+                    continue            # already cancelled via another path
+                task.state = TaskState.CANCELLED
+                task.failure_reason = f"ancestor {task_id!r} failed permanently"
+                self._n_unterminated -= 1
+                self._runnable.pop(child, None)
+                cancelled.append(child)
+        return cancelled
 
     def touch(self) -> None:
         """Bump the data version (inputs/outputs mutated in place)."""

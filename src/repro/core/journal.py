@@ -96,6 +96,11 @@ def engine_config(cws: CommonWorkflowScheduler) -> Dict[str, Any]:
         "retireFinished": cws.retire_finished,
         "retiredMax": cws.retired_max,
         "registrationTtl": cws.registration_ttl,
+        "reportLease": cws.report_lease,
+        "quarantineThreshold": cws.quarantine_threshold,
+        "quarantineDuration": cws.quarantine_duration,
+        "retryAntiAffinity": cws.retry_anti_affinity,
+        "requestDedupWindow": cws.request_dedup_window,
     }
 
 
@@ -122,6 +127,11 @@ def _build_engine(config: Dict[str, Any], adapter: Any) -> CommonWorkflowSchedul
         retired_max=config.get("retiredMax", 256),
         max_preemptions_per_round=config.get("maxPreemptionsPerRound", 0),
         registration_ttl=config.get("registrationTtl", 3600.0),
+        report_lease=config.get("reportLease"),
+        quarantine_threshold=config.get("quarantineThreshold", 0),
+        quarantine_duration=config.get("quarantineDuration", 300.0),
+        retry_anti_affinity=config.get("retryAntiAffinity", False),
+        request_dedup_window=config.get("requestDedupWindow", 1024),
     )
 
 

@@ -259,6 +259,11 @@ class CommonWorkflowScheduler:
         retired_max: int = 256,
         max_preemptions_per_round: int = 0,
         registration_ttl: Optional[float] = 3600.0,
+        report_lease: Optional[float] = None,
+        quarantine_threshold: int = 0,
+        quarantine_duration: float = 300.0,
+        retry_anti_affinity: bool = False,
+        request_dedup_window: int = 1024,
     ) -> None:
         self.adapter = adapter
         # write-ahead journal (core/journal.py). None (the default) keeps
@@ -472,6 +477,63 @@ class CommonWorkflowScheduler:
         # whole-history view after eviction
         self._retired_readiness_ops = 0
         self._retired_rank_ops = 0
+        # --- report leases (presume silent launches lost) ---
+        # A launch that produces no start/finish report within
+        # ``report_lease`` seconds is presumed lost: the engine burns its
+        # launch id, kills it at the adapter, and requeues the task
+        # through the existing requeue seam (the stale-launch-id guards
+        # reject the dead launch's late reports). The lease re-arms on
+        # the start report to bound the silence until completion — size
+        # it above the longest expected task runtime. ``_leases`` maps
+        # task_id -> (launch_id, deadline); with a constant lease
+        # duration and monotonic time, insertion order IS deadline
+        # order, so expiry scans stop at the first live entry.
+        # None (the default) disables the whole path.
+        if report_lease is not None and (
+                isinstance(report_lease, bool)
+                or not isinstance(report_lease, (int, float))
+                or not math.isfinite(report_lease) or report_lease <= 0):
+            raise ValueError(
+                f"report_lease must be a finite number > 0 or None, "
+                f"got {report_lease!r}")
+        self.report_lease = (None if report_lease is None
+                             else float(report_lease))
+        self._leases: Dict[str, Tuple[int, float]] = {}
+        self.lease_expiries = 0
+        # --- failure-domain quarantine (suspicion scoring) ---
+        # Every lease expiry and task failure on a node bumps its
+        # suspicion count; at ``quarantine_threshold`` the node is
+        # temporarily excluded from placement (it leaves the capacity
+        # index but stays up — running work continues) for
+        # ``quarantine_duration`` seconds. 0 (the default) disables
+        # scoring entirely; decisions are bit-identical.
+        self.quarantine_threshold = quarantine_threshold
+        self.quarantine_duration = float(quarantine_duration)
+        self._suspicion: Dict[str, int] = {}
+        # name -> release deadline; constant duration + monotonic time
+        # keeps insertion order = deadline order (like ``_leases``)
+        self._quarantined: Dict[str, float] = {}
+        self.quarantines = 0
+        self.quarantine_releases = 0
+        # --- anti-affinity retry placement ---
+        # A requeued task remembers the node its previous launch died on
+        # (one-shot ``Task.avoid_node``) and the next round steers it to
+        # any other fitting node; if only the killer fits, availability
+        # wins over affinity. Off by default: placement is untouched.
+        self.retry_anti_affinity = retry_anti_affinity
+        self.anti_affinity_redirects = 0
+        # --- exactly-once request window (CWSI requestId dedup) ---
+        # Client-supplied requestIds on mutating CWSI calls land here
+        # (insertion-ordered rid -> cached response envelope or None,
+        # bounded FIFO). The marker is inserted by apply() AFTER the
+        # command runs, and the request_id travels inside the journaled
+        # command, so replay rebuilds the window and recovery preserves
+        # exactly-once (a retried request after a crash is still
+        # recognised — it gets a generic duplicate-ack instead of the
+        # cached envelope, which did not survive).
+        self.request_dedup_window = request_dedup_window
+        self._seen_requests: Dict[str, Optional[str]] = {}
+        self.duplicate_requests = 0
 
     # ------------------------------------------------------------------
     # the command seam
@@ -490,6 +552,14 @@ class CommonWorkflowScheduler:
         if journal is not None:
             journal.append(now, cmd)
         result = cmd.run(self, now)
+        rid = getattr(cmd, "request_id", None)
+        if rid is not None:
+            # the marker rides the journaled command, so replay rebuilds
+            # the dedup window exactly (exactly-once survives recovery);
+            # rejected requests never reach here — they may be retried
+            self._seen_requests[rid] = None
+            while len(self._seen_requests) > self.request_dedup_window:
+                del self._seen_requests[next(iter(self._seen_requests))]
         if journal is not None and journal.snapshot_every > 0:
             journal.maybe_snapshot(self)
         return result
@@ -519,6 +589,10 @@ class CommonWorkflowScheduler:
         self.apply(_cmd.AddNode(info), now)
 
     def _apply_add_node(self, info: NodeInfo, now: float) -> None:
+        # a re-joining name starts with a clean record (the old hardware
+        # is gone; keeping its quarantine would double-add on release)
+        self._suspicion.pop(info.name, None)
+        self._quarantined.pop(info.name, None)
         self.nodes[info.name] = _NodeState(
             info=info,
             cpus_free=info.cpus,
@@ -553,8 +627,11 @@ class CommonWorkflowScheduler:
         if st is None:
             return
         st.up = False
-        if self._node_index is not None:
+        if self._node_index is not None and name not in self._quarantined:
+            # a quarantined node already left the index
             self._node_index.remove(name)
+        self._quarantined.pop(name, None)
+        self._suspicion.pop(name, None)
         self._invalidate_totals()
         self.provenance.record_node_event(NodeEvent(name, now, "DOWN"))
         victims = [tid for tid, a in self.allocations.items() if a.node == name]
@@ -889,7 +966,8 @@ class CommonWorkflowScheduler:
             if self._node_index is not None:
                 self._totals_cache = self._node_index.cluster_totals()
             else:
-                up = [st.info for st in self.nodes.values() if st.up]
+                up = [st.info for st in self.nodes.values()
+                      if st.up and st.info.name not in self._quarantined]
                 self._totals_cache = {
                     "cpus": sum(i.cpus for i in up),
                     "mem": float(sum(i.mem_bytes for i in up)),
@@ -1245,6 +1323,13 @@ class CommonWorkflowScheduler:
             return
         task.state = TaskState.RUNNING
         task.start_time = now
+        if self.report_lease is not None and task_id in self._leases:
+            # start report arrived: re-arm for the finish report (the
+            # lease now bounds the silence until completion — size
+            # report_lease above the longest expected runtime)
+            del self._leases[task_id]
+            self._leases[task_id] = (task.launch_id,
+                                     now + self.report_lease)
 
     def on_task_finished(self, task_id: str, now: float, result: TaskResult,
                          launch_id: Optional[int] = None) -> None:
@@ -1381,7 +1466,9 @@ class CommonWorkflowScheduler:
             mem_cap = idx.max_mem_total()
         else:
             mem_cap = max((st.info.mem_bytes for st in self.nodes.values()
-                           if st.up), default=0)
+                           if st.up
+                           and st.info.name not in self._quarantined),
+                          default=0)
         # placement feasibility index: infeasible demand buckets persist
         # until capacity can have grown (see __init__); feasible marks are
         # only valid until the next launch shrinks capacity
@@ -1449,6 +1536,8 @@ class CommonWorkflowScheduler:
                 node = strat.place(probe, views, ctx)
             if node is None:
                 continue
+            if task.avoid_node is not None and node == task.avoid_node:
+                node = self._avoid_redirect(task, node, mem_alloc, views)
             self._launch(task, node, mem_alloc, now)
             if quotas and task.spec.workflow_id in quota_running:
                 quota_running[task.spec.workflow_id] += 1
@@ -1473,11 +1562,32 @@ class CommonWorkflowScheduler:
     def _snapshot_views(self) -> Tuple[List[NodeView], Dict[str, int]]:
         """Materialise the full up-node view snapshot (oracle placements
         and the legacy cost model) and charge the view counters."""
-        views = [st.view() for st in self.nodes.values() if st.up]
+        views = [st.view() for st in self.nodes.values()
+                 if st.up and st.info.name not in self._quarantined]
         view_slot = {v.name: i for i, v in enumerate(views)}
         self.view_snapshots += len(views)
         self.view_materializations += len(views)
         return views, view_slot
+
+    def _avoid_redirect(self, task: Task, node: str, mem_alloc: int,
+                        views: Optional[List[NodeView]]) -> str:
+        """One-shot anti-affinity: the strategy picked the very node the
+        task's previous launch died on. Take the first OTHER fitting
+        node (registration order) instead; when only the killer fits,
+        availability beats affinity and the pick stands."""
+        res = task.spec.resources
+        alt: Optional[str] = None
+        if self._node_index is not None:
+            alt = self._node_index.first_fit_slot(
+                res.cpus, mem_alloc, res.chips, skip_name=node)
+        elif views is not None:
+            alt = next((v.name for v in views
+                        if v.name != node and v.fits(task, mem_alloc)),
+                       None)
+        if alt is None:
+            return node
+        self.anti_affinity_redirects += 1
+        return alt
 
     def _indexed_place(self, pkey: PlacementKey, cpus: float, mem: int,
                        chips: int) -> Optional[str]:
@@ -1522,7 +1632,9 @@ class CommonWorkflowScheduler:
                        if self._node_index.size() else alloc)
             else:
                 cap = max((st.info.mem_bytes for st in self.nodes.values()
-                           if st.up), default=alloc)
+                           if st.up
+                           and st.info.name not in self._quarantined),
+                          default=alloc)
         elif cap <= 0:
             cap = alloc
         return min(alloc, cap)
@@ -1550,12 +1662,22 @@ class CommonWorkflowScheduler:
         task.state = TaskState.SCHEDULED
         task.node = node
         task.schedule_time = now
+        task.avoid_node = None        # the one-shot veto is spent
+        if self.report_lease is not None:
+            # arm the report lease (pop first: re-insertion keeps the
+            # map's insertion order equal to deadline order)
+            self._leases.pop(task.task_id, None)
+            self._leases[task.task_id] = (task.launch_id,
+                                          now + self.report_lease)
         if self.predictor is not None and self.predictor.known(task.name):
             rt, _ = self.predictor.predict(task.name, task.spec.input_size, node)
             st.est_available_at = max(st.est_available_at, now) + rt
         self.adapter.launch(task, node, mem_alloc)
 
     def _release(self, task_id: str) -> None:
+        # every path that ends a live launch funnels through here, so
+        # the lease map only ever holds live launches
+        self._leases.pop(task_id, None)
         alloc = self.allocations.pop(task_id, None)
         if alloc is None:
             return
@@ -1616,9 +1738,10 @@ class CommonWorkflowScheduler:
                 fits = idx.exists_fit(res.cpus, mem_alloc, res.chips)
             else:
                 fits = any(
-                    st.up and _fits_demand(st.cpus_free, st.mem_free,
-                                           st.chips_free, res.cpus,
-                                           mem_alloc, res.chips)
+                    st.up and st.info.name not in self._quarantined
+                    and _fits_demand(st.cpus_free, st.mem_free,
+                                     st.chips_free, res.cpus,
+                                     mem_alloc, res.chips)
                     for st in self.nodes.values())
             if not fits:
                 wid = task.spec.workflow_id
@@ -1670,6 +1793,122 @@ class CommonWorkflowScheduler:
         if entries is not None and entries.pop(tid, None) is not None:
             if not entries:
                 del self._preempt_debt[wid]
+
+    # ------------------------------------------------------------------
+    # report leases + failure-domain quarantine
+    # ------------------------------------------------------------------
+    def lease_check(self, now: float) -> int:
+        """Expire overdue report leases and release served quarantines.
+
+        Drivers call this periodically (the simulator's LEASE_CHECK
+        wakeup, an executor's poll loop). Like ``schedule_pending``, the
+        no-op case is checked BEFORE the command seam so idle heartbeats
+        never reach the journal; an actionable check applies a journaled
+        ``LeaseCheck`` command, so replay expires the same launches at
+        the same instants."""
+        if not self._lease_check_due(now):
+            return 0
+        return self.apply(_cmd.LeaseCheck(), now)
+
+    def _lease_check_due(self, now: float) -> bool:
+        # both maps keep insertion order == deadline order, so the
+        # oldest entry decides in O(1)
+        for tid in self._leases:
+            return self._leases[tid][1] <= now
+        for name in self._quarantined:
+            return self._quarantined[name] <= now
+        return False
+
+    def _apply_lease_check(self, now: float) -> int:
+        expired = 0
+        while self._leases:
+            tid = next(iter(self._leases))
+            lid, deadline = self._leases[tid]
+            if deadline > now:
+                break
+            del self._leases[tid]
+            expired += self._expire_lease(tid, lid, now)
+        while self._quarantined:
+            name = next(iter(self._quarantined))
+            if self._quarantined[name] > now:
+                break
+            del self._quarantined[name]
+            self._lift_quarantine(name, now)
+        if expired:
+            self.request_schedule(now)
+        return expired
+
+    def _expire_lease(self, tid: str, lid: int, now: float) -> int:
+        """One launch produced no report inside its lease: presume the
+        report (or the launch itself) lost. The launch id is burned and
+        the launch killed at the adapter, so a late report is rejected
+        by the stale-id / requeue-window guards; the task requeues
+        without consuming a retry (silence is the transport's failure,
+        not the task's)."""
+        task = self._find_task(tid)
+        if task is None or task.launch_id != lid or not task.state.active:
+            return 0           # stale entry (defensive; _release prunes)
+        self.lease_expiries += 1
+        node = task.node
+        result = TaskResult(
+            False, reason=f"report lease expired on {node}")
+        self._suspect_node(node, now)
+        task.end_time = now
+        if tid in self.spec_copies:
+            # a silent speculative copy is not a DAG task: kill it and
+            # unpair, the original keeps running
+            copy = self.spec_copies.pop(tid)
+            if copy.speculative_of is not None:
+                self.spec_of_original.pop(copy.speculative_of, None)
+            self._release(tid)
+            copy.state = TaskState.KILLED
+            self._record(copy, "KILLED", result)
+            self.mem_allocated.pop(tid, None)
+            self.adapter.kill(tid)
+            return 1
+        self._release(tid)
+        self.adapter.kill(tid)
+        self._handle_failure(task, now, result, requeue_free=True)
+        return 1
+
+    def _suspect_node(self, node: Optional[str], now: float) -> None:
+        """Bump a node's suspicion score; quarantine at the threshold.
+
+        A quarantined node leaves the capacity index (no NEW launches
+        land on it) but stays ``up`` — running work continues and its
+        reports are still honoured. The quarantine lifts after
+        ``quarantine_duration`` via the periodic lease check."""
+        if self.quarantine_threshold <= 0 or node is None:
+            return
+        if node not in self.nodes or node in self._quarantined:
+            return
+        count = self._suspicion.get(node, 0) + 1
+        if count < self.quarantine_threshold:
+            self._suspicion[node] = count
+            return
+        self._suspicion.pop(node, None)
+        self._quarantined[node] = now + self.quarantine_duration
+        if self._node_index is not None:
+            self._node_index.remove(node)
+        self._invalidate_totals()
+        self._capacity_version += 1
+        self.quarantines += 1
+        self.provenance.record_node_event(
+            NodeEvent(node, now, "QUARANTINED"))
+        log.warning("node %s quarantined until %.3f", node,
+                    now + self.quarantine_duration)
+
+    def _lift_quarantine(self, name: str, now: float) -> None:
+        self.quarantine_releases += 1
+        st = self.nodes.get(name)
+        if st is None or not st.up:
+            return             # the node left the cluster meanwhile
+        if self._node_index is not None:
+            self._node_index.add(name, st)
+        self._invalidate_totals()
+        self._capacity_version += 1
+        self.provenance.record_node_event(NodeEvent(name, now, "RECOVERED"))
+        self.request_schedule(now)
 
     # ------------------------------------------------------------------
     # registration TTL
@@ -1812,7 +2051,12 @@ class CommonWorkflowScheduler:
     def _handle_failure(self, task: Task, now: float, result: TaskResult,
                         requeue_free: bool = False) -> None:
         self._record(task, "FAILED", result)
+        failed_on = task.node
         if not requeue_free:
+            # a real failure on a live node counts against it (requeue-
+            # free paths are the engine's doing — node loss bumps
+            # nothing, lease expiry scores its node itself)
+            self._suspect_node(failed_on, now)
             task.attempt += 1
         if task.attempt > task.spec.max_retries:
             task.state = TaskState.ERROR
@@ -1825,6 +2069,16 @@ class CommonWorkflowScheduler:
             log.warning("task %s permanently failed: %s", task.task_id, result.reason)
             dag = self.dags[task.spec.workflow_id]
             dag.on_task_error(task.task_id)
+            # terminal-failure propagation: every descendant still holds
+            # an unmet dependency on this task, so each is provably
+            # PENDING — cancel them now or the workflow wedges with
+            # ``finished()`` forever counting them as unterminated
+            for cid in dag.cancel_descendants(task.task_id):
+                child = dag.tasks[cid]
+                child.end_time = now
+                self.tasks_settled += 1
+                self._record(child, "CANCELLED",
+                             TaskResult(False, reason=child.failure_reason))
             if dag.finished():
                 self._unfinished.pop(dag.workflow_id, None)
                 self._evict_workflow_caches(dag.workflow_id)
@@ -1832,6 +2086,10 @@ class CommonWorkflowScheduler:
                     self.on_workflow_done(dag.workflow_id)
                 self._retire_workflow(dag, now)
             return
+        if self.retry_anti_affinity and failed_on is not None:
+            # one-shot veto: steer the retry off the node that just
+            # killed it (spent at the next launch, honoured or not)
+            task.avoid_node = failed_on
         task.state = TaskState.READY
         task.node = None
         task.failure_reason = result.reason
@@ -1886,7 +2144,8 @@ class CommonWorkflowScheduler:
                     res.cpus, mem_alloc, res.chips, skip_name=alloc.node)
             else:
                 views = [st.view() for st in self.nodes.values()
-                         if st.up and st.info.name != alloc.node]
+                         if st.up and st.info.name != alloc.node
+                         and st.info.name not in self._quarantined]
                 self.view_materializations += len(views)
                 self.node_fit_ops += len(views)   # same cost model as the
                 # oracle placement walk, so legacy-vs-indexed node_fit_ops
@@ -1970,6 +2229,15 @@ class CommonWorkflowScheduler:
             "decision_lag": self.decision_lag,
             "tasks_settled": self.tasks_settled,
             "unfinished_workflows": len(self._unfinished),
+            "report_lease": self.report_lease,
+            "live_leases": len(self._leases),
+            "lease_expiries": self.lease_expiries,
+            "quarantined_nodes": sorted(self._quarantined),
+            "quarantines": self.quarantines,
+            "quarantine_releases": self.quarantine_releases,
+            "anti_affinity_redirects": self.anti_affinity_redirects,
+            "duplicate_requests": self.duplicate_requests,
+            "dedup_window_size": len(self._seen_requests),
         }
 
     def op_counts(self) -> Dict[str, int]:
@@ -2003,4 +2271,9 @@ class CommonWorkflowScheduler:
             "reaped_policies": self.reaped_policies,
             "tasks_settled": self.tasks_settled,
             "unfinished_workflows": len(self._unfinished),
+            "lease_expiries": self.lease_expiries,
+            "quarantines": self.quarantines,
+            "quarantine_releases": self.quarantine_releases,
+            "anti_affinity_redirects": self.anti_affinity_redirects,
+            "duplicate_requests": self.duplicate_requests,
         }

@@ -265,6 +265,12 @@ BAD_BODIES = [
     ("POST", "/v1/schedule", "go", 400),
     ("POST", "/v1/schedule", [1, 2], 400),
     ("POST", "/v1/schedule/extra", None, 404),
+    # exactly-once requestId discipline: a malformed id is rejected
+    # before routing, so nothing executes and nothing is deduped
+    ("POST", "/v1/schedule", {"requestId": ""}, 400),
+    ("POST", "/v1/schedule", {"requestId": 7}, 400),
+    ("POST", "/v1/workflow/w9", {"name": "w9", "requestId": None}, 400),
+    ("PUT", "/v1/workflow/w0/share", {"share": 1.0, "requestId": ["x"]}, 400),
 ]
 
 

@@ -169,3 +169,114 @@ def test_concurrent_writers_serialise_through_the_journal(rig):
     assert cws.journal.seq == seq0 + n_threads * n_tasks
     for i in range(n_threads):
         assert len(cws.dags[f"wf{i}"].tasks) == n_tasks
+
+
+# ---------------------------------------------------------------------------
+# Transport hardening (PR 9): framing rejects, stalled bodies, shedding
+# ---------------------------------------------------------------------------
+
+def _headers_only(httpd, content_length, wait=1.5):
+    """Send a POST whose declared body never arrives; return the CWSI
+    envelope the server answers with once it gives up."""
+    import socket as _socket
+    host, port = httpd.address
+    s = _socket.create_connection((host, port), timeout=wait + 5)
+    s.sendall((f"POST /v1/schedule HTTP/1.1\r\nHost: {host}\r\n"
+               f"Content-Length: {content_length}\r\n\r\n").encode())
+    chunks = b""
+    s.settimeout(wait + 5)
+    try:
+        while b"\r\n\r\n" not in chunks or not chunks.split(b"\r\n\r\n", 1)[1]:
+            part = s.recv(4096)
+            if not part:
+                break
+            chunks += part
+    finally:
+        s.close()
+    return json.loads(chunks.split(b"\r\n\r\n", 1)[1])
+
+
+def test_missing_content_length_on_mutation_is_400(rig):
+    cws, server, httpd, client = rig
+    seq = cws.journal.seq
+    host, port = httpd.address
+    conn = http.client.HTTPConnection(host, port, timeout=10)
+    conn.putrequest("POST", "/v1/schedule")         # no body, no CL header
+    conn.endheaders()
+    resp = conn.getresponse()
+    env = json.loads(resp.read())
+    conn.close()
+    assert resp.status == 200
+    assert env["status"] == 400
+    assert "Content-Length" in env["body"]["error"]
+    assert cws.journal.seq == seq                   # never reached the engine
+    # reads without a length are fine (no body expected)
+    assert _raw(httpd, "GET", "/v1/stats")["status"] == 200
+
+
+def test_unparseable_content_length_is_400(rig):
+    cws, server, httpd, client = rig
+    host, port = httpd.address
+    conn = http.client.HTTPConnection(host, port, timeout=10)
+    conn.putrequest("POST", "/v1/schedule")
+    conn.putheader("Content-Length", "banana")
+    conn.endheaders()
+    resp = conn.getresponse()
+    env = json.loads(resp.read())
+    conn.close()
+    assert resp.status == 200
+    assert env["status"] == 400
+    assert "Content-Length" in env["body"]["error"]
+
+
+def test_oversized_body_is_rejected_before_reading_it(tmp_path):
+    cws = CommonWorkflowScheduler(adapter=_NullAdapter())
+    server = CWSIServer(cws)
+    with CWSIHTTPServer(server, max_body_bytes=64) as httpd:
+        env = _raw(httpd, "POST", "/v1/workflow/w0",
+                   json_body={"name": "w0", "pad": "x" * 256})
+        assert env["status"] == 400
+        assert "exceeds" in env["body"]["error"]
+        assert httpd.rejected_bodies == 1
+        assert "w0" not in cws.dags
+        # a right-sized request still works on a fresh connection
+        env = _raw(httpd, "POST", "/v1/workflow/w0", json_body={"name": "w0"})
+        assert env["status"] == 200
+
+
+def test_stalled_body_times_out_with_408():
+    cws = CommonWorkflowScheduler(adapter=_NullAdapter())
+    server = CWSIServer(cws)
+    with CWSIHTTPServer(server, read_timeout=0.3) as httpd:
+        env = _headers_only(httpd, content_length=10, wait=0.3)
+        assert env["status"] == 408
+        assert "timed out" in env["body"]["error"]
+        assert httpd.timed_out_requests == 1
+
+
+def test_overload_shedding_is_503_with_retry_after():
+    import time as _time
+    cws = CommonWorkflowScheduler(adapter=_NullAdapter())
+    server = CWSIServer(cws)
+    with CWSIHTTPServer(server, max_inflight=1,
+                        read_timeout=1.0) as httpd:
+        host, port = httpd.address
+        # occupy the single slot with a request whose body never arrives
+        import socket as _socket
+        holder = _socket.create_connection((host, port), timeout=10)
+        holder.sendall((f"POST /v1/schedule HTTP/1.1\r\nHost: {host}\r\n"
+                        "Content-Length: 10\r\n\r\n").encode())
+        _time.sleep(0.2)                  # let the handler take the slot
+        try:
+            conn = http.client.HTTPConnection(host, port, timeout=10)
+            conn.request("GET", "/v1/stats")
+            resp = conn.getresponse()
+            env = json.loads(resp.read())
+            assert resp.status == 200
+            assert env["status"] == 503
+            assert "error" in env["body"]
+            assert resp.getheader("Retry-After") == "1"
+            conn.close()
+        finally:
+            holder.close()
+        assert httpd.shed_requests == 1
