@@ -36,6 +36,18 @@ disabled preemption is provably absent, not merely idle. CI re-asserts
 both flags (``preempt_fairness_improved``,
 ``preempt_off_traces_identical``) from the archived JSON.
 
+The **gang sweep** pins the cross-node gang placement layer: nf-core
+bursts racing long-running multi-node training gangs under preemptive
+fair share. Asserted: a gang-capable engine is provably absent on k=1
+workloads (bit-identical traces across gang_spread / legacy_scan /
+original, zero gang counters — ``gang_traces_identical_k1``), a gang
+never leaks a partial allocation under preemption or node churn
+(``gang_no_partial_allocations``), and checkpoint-aware preemption
+strictly beats restart-from-zero on the training tenant's completion
+time for the same seeded mix (``ckpt_preempt_makespan_improved``) —
+utilisation and the banked committed seconds ride along in the JSON.
+CI re-asserts the three flags from the archived artifact.
+
 The **coalesced-burst sweep** pins the constant-time event path: 10
 symmetric tenants of wide zero-jitter fan-out stages on an undersized
 homogeneous cluster, so whole waves of tasks finish at the *same virtual
@@ -174,6 +186,30 @@ PREEMPT_REASSERT_PERIOD = 400.0  # gap between re-PUTs
 # comparison while every bounded window showed preemptive strictly
 # fairer)
 PREEMPT_SAMPLE_WINDOW = PREEMPT_REASSERT_PERIOD * (PREEMPT_REASSERTS + 1)
+
+# gang sweep: nf-core bursts racing long-running multi-node training
+# gangs. Three claims ride on it: a gang-capable engine is provably
+# absent on k=1 workloads (bit-identical traces, zero gang counters), a
+# gang never leaks a partial allocation — not under preemption, not
+# under node churn — and checkpoint-aware preemption strictly beats
+# restart-from-zero on the training tenant's completion time.
+GANG_NODES = 4
+GANG_K1_TENANTS = 2 if SMOKE else 4
+GANG_K1_SAMPLES = 4 if SMOKE else 10
+GANG_CHURN_SAMPLES = 2 if SMOKE else 4
+GANG_TRAIN_CHUNKS = 2 if SMOKE else 3
+GANG_TRAIN_RUNTIME = 200.0
+GANG_CKPT_S = 30.0
+# the bursts arrive two whole checkpoint intervals into the gang's run,
+# so the ckpt-aware variant has committed progress to bank when the
+# high-share arrival triggers the preemption pass; the preempt rig's
+# gang deliberately leaves less than the smallest nf-core demand free
+# on every node, so that arrival is itself the blocked placement that
+# arms the pass
+GANG_BURST_T = 65.0
+GANG_BURST_SAMPLES = 3 if SMOKE else 8
+GANG_PREEMPT_NODES = 2
+GANG_PREEMPT_CPUS = 7.0
 
 # coalesced-burst sweep: symmetric tenants, zero-jitter wide stages, an
 # undersized homogeneous cluster → same-timestamp completion bursts with a
@@ -556,6 +592,232 @@ def _preemptive_arbitration(verbose: bool) -> Tuple[Dict[str, float],
         "preemptive": {k: v for k, v in on.items() if k != "trace"},
     }
     return metrics, sweeps
+
+
+def _train_gang_workflow(wid: str, n_chunks: int, nodes: int, cpus: float,
+                         runtime: float, ckpt: float | None,
+                         elastic: Tuple[int, ...] = ()) -> WorkflowDAG:
+    """A training-shaped chain of k-node gang chunks: the long-running
+    tenant of the gang sweep. ``cpus`` is the PER-NODE demand."""
+    dag = WorkflowDAG(wid, f"train:{wid}")
+    prev = None
+    for c in range(n_chunks):
+        tid = f"{wid}.c{c:02d}"
+        params: Dict[str, Any] = {}
+        if ckpt is not None:
+            params["ckpt"] = {"interval_s": ckpt}
+        if elastic:
+            params["elastic"] = {"allowed": list(elastic)}
+        dag.add_task(
+            TaskSpec(task_id=tid, name="train_chunk",
+                     resources=Resources(cpus=cpus, mem_bytes=GiB,
+                                         nodes=nodes),
+                     base_runtime_s=runtime, params=params),
+            deps=(prev,) if prev else ())
+        prev = tid
+    return dag
+
+
+def _gang_k1_run(strategy: str, legacy: bool) -> Tuple[List[Any], Any]:
+    """A gang-FREE nf-core workload through a gang-capable engine: the
+    k=1 regime where every gang path must be provably absent."""
+    sim = ClusterSimulator(heterogeneous_cluster(GANG_NODES),
+                           SimConfig(seed=17))
+    cws = CommonWorkflowScheduler(adapter=sim, strategy=strategy,
+                                  arbiter="fair_share", legacy_scan=legacy)
+    for i in range(GANG_K1_TENANTS):
+        cws.set_workflow_share(f"wf-{i}", float(1 + i % 3))
+    sim.attach(cws)
+    dags = []
+    for i in range(GANG_K1_TENANTS):
+        dag = build_workflow("rnaseq", seed=300 + i, workflow_id=f"wf-{i}",
+                             n_samples=GANG_K1_SAMPLES)
+        dags.append(dag)
+        sim.submit_workflow_at(10.0 * i, dag)
+    sim.run()
+    assert all(d.succeeded() for d in dags)
+    trace = sorted((t.task_id, t.node, round(t.start_time, 9))
+                   for d in dags for t in d.tasks.values())
+    return trace, cws
+
+
+def _gang_churn_run() -> Dict[str, Any]:
+    """Training gangs + nf-core bursts + preemption + node churn, with
+    the all-or-nothing invariant sampled after every scheduling round:
+    a live multi-node allocation always spans distinct, present nodes
+    and no node's free capacity ever goes negative."""
+    nodes = [cpu_node(f"g{i}", cpus=8.0, mem_gib=32)
+             for i in range(GANG_NODES)]
+    sim = ClusterSimulator(nodes, SimConfig(seed=23,
+                                            runtime_noise_sigma=0.0))
+    cws = CommonWorkflowScheduler(adapter=sim, strategy="gang_spread",
+                                  arbiter="fair_share",
+                                  max_preemptions_per_round=2)
+    cws.set_workflow_share("train", 1.0)
+    for i in range(2):
+        cws.set_workflow_share(f"burst-{i}", 2.0)
+    sim.attach(cws)
+
+    violations = [0]
+    inner = cws.schedule
+
+    def checking_schedule(now: float) -> int:
+        n = inner(now)
+        for alloc in cws.allocations.values():
+            m = alloc.members
+            if len(m) > 1 and (len(set(m)) != len(m)
+                               or any(x not in cws.nodes for x in m)):
+                violations[0] += 1
+        if any(st.cpus_free < -1e-9 or st.mem_free < 0
+               or st.chips_free < 0 for st in cws.nodes.values()):
+            violations[0] += 1
+        return n
+
+    cws.schedule = checking_schedule
+    train = _train_gang_workflow("train", GANG_TRAIN_CHUNKS, nodes=3,
+                                 cpus=4.0, runtime=GANG_TRAIN_RUNTIME,
+                                 ckpt=GANG_CKPT_S, elastic=(2,))
+    dags = [train]
+    sim.submit_workflow_at(0.0, train)
+    for i in range(2):
+        dag = build_workflow("chipseq", seed=400 + i,
+                             workflow_id=f"burst-{i}",
+                             n_samples=GANG_CHURN_SAMPLES)
+        dags.append(dag)
+        sim.submit_workflow_at(GANG_BURST_T + 10.0 * i, dag)
+    # mid-run churn: a gang member dies while the gang runs, rejoins later
+    sim.fail_node_at(40.0, "g1")
+    sim.join_node_at(120.0, cpu_node("g1", cpus=8.0, mem_gib=32))
+    sim.run()
+    assert all(d.succeeded() for d in dags)
+    clean_end = (not cws.allocations
+                 and all(st.cpus_free == st.info.cpus
+                         and st.mem_free == st.info.mem_bytes
+                         and st.chips_free == st.info.chips
+                         for st in cws.nodes.values()))
+    return {
+        "violations": violations[0],
+        "clean_end": clean_end,
+        "gang_launches": cws.gang_launches,
+        "gang_resizes": cws.gang_resizes,
+        "gang_preemptions": cws.gang_preemptions,
+        "makespan": sim.now,
+    }
+
+
+def _gang_preempt_run(ckpt: float | None) -> Dict[str, Any]:
+    """One ckpt-vs-zero point: a 2-node training gang runs alone past
+    two checkpoint intervals, then high-share nf-core bursts arrive and
+    preempt it. ``ckpt=None`` is the restart-from-zero baseline; the
+    workload, seed and arrival times are otherwise identical."""
+    nodes = [cpu_node(f"p{i}", cpus=8.0, mem_gib=32)
+             for i in range(GANG_PREEMPT_NODES)]
+    sim = ClusterSimulator(nodes, SimConfig(seed=29,
+                                            runtime_noise_sigma=0.0))
+    cws = CommonWorkflowScheduler(adapter=sim, strategy="gang_spread",
+                                  arbiter="fair_share",
+                                  max_preemptions_per_round=2)
+    cws.set_workflow_share("train", 0.1)
+    for i in range(2):
+        cws.set_workflow_share(f"burst-{i}", 9.0)
+    sim.attach(cws)
+
+    # time-weighted cluster cpu utilisation, sampled per scheduling round
+    busy = [0.0, 0.0, 0.0]          # busy cpu-s, capacity cpu-s, last now
+    inner = cws.schedule
+
+    def sampling_schedule(now: float) -> int:
+        dt = now - busy[2]
+        if dt > 0:
+            busy[0] += dt * sum(st.info.cpus - st.cpus_free
+                                for st in cws.nodes.values())
+            busy[1] += dt * sum(st.info.cpus for st in cws.nodes.values())
+            busy[2] = now
+        return inner(now)
+
+    cws.schedule = sampling_schedule
+    train = _train_gang_workflow("train", GANG_TRAIN_CHUNKS,
+                                 nodes=GANG_PREEMPT_NODES,
+                                 cpus=GANG_PREEMPT_CPUS,
+                                 runtime=GANG_TRAIN_RUNTIME, ckpt=ckpt)
+    dags = [train]
+    sim.submit_workflow_at(0.0, train)
+    for i in range(2):
+        dag = build_workflow("rnaseq", seed=500 + i,
+                             workflow_id=f"burst-{i}",
+                             n_samples=GANG_BURST_SAMPLES)
+        dags.append(dag)
+        sim.submit_workflow_at(GANG_BURST_T + 5.0 * i, dag)
+    sim.run()
+    assert all(d.succeeded() for d in dags)
+    return {
+        "train_makespan": max(t.end_time for t in train.tasks.values()),
+        "mix_makespan": sim.now,
+        "utilisation": busy[0] / max(busy[1], 1e-9),
+        "gang_preemptions": cws.gang_preemptions,
+        "gang_launches": cws.gang_launches,
+        "committed_max": max(t.committed_s for t in train.tasks.values()),
+    }
+
+
+def _gang_sweep(verbose: bool) -> Tuple[Dict[str, float], Dict[str, Any]]:
+    """The gang-placement flags (see the constants block for the rig)."""
+    # -- k=1 identity: gang machinery provably absent on gang-free work --
+    spread, cws_spread = _gang_k1_run("gang_spread", legacy=False)
+    spread_legacy, cws_legacy = _gang_k1_run("gang_spread", legacy=True)
+    original, cws_orig = _gang_k1_run("original", legacy=False)
+    k1_identical = spread == spread_legacy == original
+    k1_counters_zero = all(
+        c.gang_launches == c.gang_resizes == c.gang_preemptions == 0
+        for c in (cws_spread, cws_legacy, cws_orig))
+    assert k1_identical, "gang-capable engine changed k=1 decisions"
+    assert k1_counters_zero, "gang counters moved on a gang-free workload"
+
+    # -- atomicity under churn + preemption --
+    churn = _gang_churn_run()
+    no_partial = churn["violations"] == 0 and churn["clean_end"]
+    assert no_partial, f"partial gang allocation leaked: {churn}"
+    assert churn["gang_launches"] > 0
+
+    # -- checkpoint-aware vs restart-from-zero preemption --
+    ckpt = _gang_preempt_run(ckpt=GANG_CKPT_S)
+    zero = _gang_preempt_run(ckpt=None)
+    assert ckpt["gang_preemptions"] >= 1 and zero["gang_preemptions"] >= 1, (
+        "the gang sweep's preemption trigger never fired")
+    assert ckpt["committed_max"] >= GANG_CKPT_S, ckpt["committed_max"]
+    assert zero["committed_max"] == 0.0, zero["committed_max"]
+    improved = ckpt["train_makespan"] < zero["train_makespan"]
+    assert improved, (
+        f"checkpoint-aware preemption did not beat restart-from-zero: "
+        f"{ckpt['train_makespan']:.1f}s vs {zero['train_makespan']:.1f}s")
+
+    if verbose:
+        print(f"  gang k=1: {len(spread)} tasks, spread == legacy == "
+              f"original: {k1_identical} (gang counters zero: "
+              f"{k1_counters_zero})")
+        print(f"    churn run: {churn['gang_launches']} gang launches, "
+              f"{churn['gang_resizes']} resizes, "
+              f"{churn['gang_preemptions']} preemptions, "
+              f"violations {churn['violations']}, clean end "
+              f"{churn['clean_end']}")
+        print(f"    ckpt-aware train makespan {ckpt['train_makespan']:,.0f}s "
+              f"(util {100 * ckpt['utilisation']:.0f}%) vs restart-from-"
+              f"zero {zero['train_makespan']:,.0f}s "
+              f"(util {100 * zero['utilisation']:.0f}%), committed "
+              f"{ckpt['committed_max']:.0f}s banked")
+    metrics = {
+        "gang_traces_identical_k1": 1.0 if (k1_identical
+                                            and k1_counters_zero) else 0.0,
+        "gang_no_partial_allocations": 1.0 if no_partial else 0.0,
+        "ckpt_preempt_makespan_improved": 1.0 if improved else 0.0,
+        "gang_ckpt_train_makespan_s": ckpt["train_makespan"],
+        "gang_zero_train_makespan_s": zero["train_makespan"],
+        "gang_ckpt_utilisation": ckpt["utilisation"],
+        "gang_zero_utilisation": zero["utilisation"],
+        "gang_committed_banked_s": ckpt["committed_max"],
+    }
+    return metrics, {"churn": churn, "ckpt_aware": ckpt,
+                     "restart_from_zero": zero}
 
 
 def _burst_workflow(wid: str, width: int, stages: int) -> WorkflowDAG:
@@ -1354,6 +1616,7 @@ def run(verbose: bool = True) -> Tuple[float, Dict[str, float]]:
         ("compare", _compares),
         ("mixed_tenant", _keyed("mixed_tenant", _mixed_tenant)),
         ("preemption", _keyed("preemption", _preemptive_arbitration)),
+        ("gang", _keyed("gang", _gang_sweep)),
         ("coalesced_burst", _keyed("coalesced_burst", _coalesced_burst)),
         ("journal", _keyed("journal", _journal_sweep)),
         ("node_scale", _keyed("node_scale", _node_scale)),

@@ -52,6 +52,10 @@ class LocalExecutor:
 
     # ---- ClusterAdapter ----
     def launch(self, task: Task, node: str, mem_alloc: int) -> None:
+        # a gang launch (task.gang_nodes spans k lanes) still runs as ONE
+        # worker, seated at the head lane: the engine holds the resource
+        # reservations on every member, and a jitted multi-device step
+        # drives all devices from a single host thread anyway
         self._cancelled[task.task_id] = False
         self._launches[task.task_id] = task.launch_id
         # capture the launch id now: the Task object is shared, so a

@@ -242,6 +242,10 @@ class ClusterSimulator:
         # node -> unretired launch generations; NODE_FAIL consults only
         # this (not every launch in history)
         self._gens_on_node: Dict[str, set] = {}
+        # gang launches only: gen -> every member node, so _retire can
+        # deregister the generation from all of them (singles stay on
+        # the _node_of_launch fast path)
+        self._members_of_launch: Dict[int, Tuple[str, ...]] = {}
         self.launches = 0
         self.kills = 0
         # per-launch fault oracle (faults.FaultInjector.arm installs it);
@@ -270,6 +274,15 @@ class ClusterSimulator:
         self._node_of_launch[gen] = node
         self._task_of_launch[gen] = task
         self._gens_on_node.setdefault(node, set()).add(gen)
+        members = task.gang_nodes if len(task.gang_nodes) > 1 else (node,)
+        if len(members) > 1:
+            # gang: the generation is live on every member, so losing ANY
+            # member node kills the whole launch (all-or-nothing execution
+            # mirrors all-or-nothing placement)
+            self._members_of_launch[gen] = tuple(members)
+            for m in members:
+                if m != node:
+                    self._gens_on_node.setdefault(m, set()).add(gen)
         # engine-issued launch id, reported back with start/finish so the
         # engine itself can reject reports from superseded launches
         lid = task.launch_id
@@ -287,13 +300,29 @@ class ClusterSimulator:
         stage = self.config.staging_latency + remote / self.config.staging_bandwidth
         start = self.now + stage
 
+        if task.committed_s > 0.0:
+            # resume from the last committed checkpoint: only the
+            # remaining base-runtime work is executed on this launch
+            base_runtime = max(base_runtime - task.committed_s, 0.0)
+
         speed = self.cws.nodes[node].info.speed_factor if node in self.cws.nodes else 1.0
+        if len(members) > 1:
+            # a gang paces at its slowest member (synchronous steps)
+            speed = min(
+                (self.cws.nodes[m].info.speed_factor
+                 for m in members if m in self.cws.nodes),
+                default=speed)
         noise = float(self.rng.lognormal(0.0, self.config.runtime_noise_sigma))
         straggle = 1.0
         if self.config.straggler_prob > 0 and self.rng.random() < self.config.straggler_prob:
             lo, hi = self.config.straggler_factor
             straggle = float(self.rng.uniform(lo, hi))
         runtime = base_runtime / max(speed, 1e-6) * noise * straggle
+        req_nodes = task.spec.resources.nodes
+        if req_nodes > 1 and len(members) < req_nodes:
+            # elastic resize: fewer data-parallel replicas → proportionally
+            # more wall-clock per step
+            runtime *= req_nodes / len(members)
 
         if self.config.oom_check and true_peak > 0 and mem_alloc < true_peak:
             # OOM-kill partway through (the task dies when it touches the
@@ -349,12 +378,14 @@ class ClusterSimulator:
         """Drop a launch's bookkeeping once it can never go live again."""
         node = self._node_of_launch.pop(gen, None)
         self._task_of_launch.pop(gen, None)
-        if node is not None:
-            gens = self._gens_on_node.get(node)
+        members = self._members_of_launch.pop(gen, None)
+        for m in (members if members is not None else
+                  ((node,) if node is not None else ())):
+            gens = self._gens_on_node.get(m)
             if gens is not None:
                 gens.discard(gen)
                 if not gens:
-                    del self._gens_on_node[node]
+                    del self._gens_on_node[m]
 
     # ------------------------------------------------------------------
     # fault & elasticity injection (schedule before run())

@@ -409,11 +409,17 @@ class WeightedFairShareArbiter(Arbiter):
             heads[wid] += 1
             out.append(task)
             res = task.spec.resources
-            # charge at least a token amount so zero-cost tasks still rotate
-            virt[wid] += max(
-                dominant_cost(res.cpus, res.mem_bytes, res.chips, totals),
-                1e-9,
-            )
+            # charge at least a token amount so zero-cost tasks still
+            # rotate; a gang is one emission holding k nodes' resources
+            # (gated so nodes == 1 keeps the exact pre-gang float path)
+            if res.nodes > 1:
+                cost = dominant_cost(res.cpus * res.nodes,
+                                     res.mem_bytes * res.nodes,
+                                     res.chips * res.nodes, totals)
+            else:
+                cost = dominant_cost(res.cpus, res.mem_bytes, res.chips,
+                                     totals)
+            virt[wid] += max(cost, 1e-9)
             allow = allowance[wid]
             if allow is not None:
                 allow -= 1

@@ -341,13 +341,18 @@ class SubmitWorkflow(Command):
                         cpus = float(r.cpus)
                         if not math.isfinite(cpus):
                             raise ValueError("non-finite cpus")
+                        # "nodes" mirrors Resources.to_json: emitted only
+                        # when != 1, keeping pre-gang journal bytes stable
+                        gang_sfx = (f',"nodes":{int(r.nodes)}'
+                                    if r.nodes != 1 else "")
                         res = rcache[r] = (
                             f'{{"cpus":{cpus!r},'
                             f'"memoryInBytes":{int(r.mem_bytes)},'
                             f'"chips":{int(r.chips)},'
                             f'"hbmBytesPerChip":{int(r.hbm_bytes_per_chip)},'
                             f'"accelerator":{_qstr(r.accelerator)},'
-                            f'"gang":{"true" if r.gang else "false"}}}')
+                            f'"gang":{"true" if r.gang else "false"}'
+                            f'{gang_sfx}}}')
                     rid[id(r)] = res
                 tparts.append(
                     f'{{"id":{_qstr(s.task_id)},"name":{q(s.name)},'

@@ -55,6 +55,26 @@ class DataRef:
         return DataRef(d["name"], int(d.get("sizeBytes", 0)), d.get("location"))
 
 
+def _checked_count(d: Dict[str, Any], key: str, default: int,
+                   minimum: int) -> int:
+    """Strict wire typing for the TPU count fields (chips/nodes/hbm).
+
+    The share/quota endpoints already reject malformed numerics with a
+    400; the resource counts used to silently coerce (``True`` → 1,
+    ``2.5`` → 2), which turns a client bug into a quietly wrong
+    placement. A count must arrive as a JSON integer (bool is a subtype
+    of int in Python — rejected explicitly) at or above its floor.
+    """
+    v = d.get(key, default)
+    if isinstance(v, bool) or not isinstance(v, int):
+        raise ValueError(
+            f"resources.{key} must be an integer, got {v!r}")
+    if v < minimum:
+        raise ValueError(
+            f"resources.{key} must be >= {minimum}, got {v!r}")
+    return v
+
+
 @dataclass(frozen=True)
 class Resources:
     """Resource request. CPU-cluster fields + TPU-native extensions."""
@@ -66,9 +86,19 @@ class Resources:
     hbm_bytes_per_chip: int = 0     # from compiled memory_analysis()
     accelerator: str = ""           # e.g. "tpu-v5e"
     gang: bool = False              # all-or-nothing co-scheduling
+    # all-or-nothing co-placement on this many *distinct* nodes; the
+    # request (cpus/mem/chips) is per node, so a nodes=k task holds
+    # k × (cpus, mem, chips). k > 1 implies gang=True.
+    nodes: int = 1
+
+    def __post_init__(self) -> None:
+        if self.nodes < 1:
+            raise ValueError(f"resources.nodes must be >= 1, got {self.nodes!r}")
+        if self.nodes > 1 and not self.gang:
+            object.__setattr__(self, "gang", True)
 
     def to_json(self) -> Dict[str, Any]:
-        return {
+        out = {
             "cpus": self.cpus,
             "memoryInBytes": self.mem_bytes,
             "chips": self.chips,
@@ -76,16 +106,23 @@ class Resources:
             "accelerator": self.accelerator,
             "gang": self.gang,
         }
+        # emitted only when set: every pre-gang payload (and its journal
+        # bytes, golden traces, recovery hashes) stays byte-identical
+        if self.nodes != 1:
+            out["nodes"] = self.nodes
+        return out
 
     @staticmethod
     def from_json(d: Dict[str, Any]) -> "Resources":
+        nodes = _checked_count(d, "nodes", 1, 1)
         return Resources(
             cpus=float(d.get("cpus", 1.0)),
             mem_bytes=int(d.get("memoryInBytes", 1 << 30)),
-            chips=int(d.get("chips", 0)),
-            hbm_bytes_per_chip=int(d.get("hbmBytesPerChip", 0)),
+            chips=_checked_count(d, "chips", 0, 0),
+            hbm_bytes_per_chip=_checked_count(d, "hbmBytesPerChip", 0, 0),
             accelerator=d.get("accelerator", ""),
-            gang=bool(d.get("gang", False)),
+            gang=bool(d.get("gang", False)) or nodes > 1,
+            nodes=nodes,
         )
 
 
@@ -163,6 +200,16 @@ class Task:
     # died on (set on requeue when the engine's retry_anti_affinity is
     # on, cleared at the next launch whether honoured or not)
     avoid_node: Optional[str] = None
+    # all member nodes of the task's live gang launch (empty when the
+    # task is not placed, or is a plain nodes=1 task); ``node`` is the
+    # first member, kept for every single-node code path
+    gang_nodes: Tuple[str, ...] = ()
+    # checkpoint-committed progress in seconds of base runtime: work a
+    # preempted launch does not repeat because its last checkpoint
+    # manifest survives. Monotone per task; reset only by a full retry
+    # after a *failure* (a crash may lose the manifest; preemption never
+    # does — the engine kills only after the lease-held report settles)
+    committed_s: float = 0.0
 
     @property
     def task_id(self) -> str:

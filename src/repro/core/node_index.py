@@ -186,6 +186,38 @@ class _FitTree:
             stack.append((2 * node, l, mid))
         return None, checks
 
+    def collect_fits(self, lo: int, hi: int, cpus: float, mem: int,
+                     chips: int, need: int) -> Tuple[List[int], int]:
+        """Leftmost ``need`` fitting leaves in [lo, hi), left to right.
+
+        The gang query: same pruned descent as ``first_fit``, but the
+        walk continues until ``need`` admitting leaves are collected (or
+        the range is exhausted — the caller treats a short list as "no
+        gang fits", all-or-nothing). Returns (slots, leaf evaluations).
+        """
+        out: List[int] = []
+        if lo >= hi or need <= 0:
+            return out, 0
+        checks = 0
+        stack = [(1, 0, self.size)]
+        while stack:
+            node, l, r = stack.pop()
+            if r <= lo or hi <= l:
+                continue
+            if r - l == 1:
+                checks += 1
+                if self._admits(node, cpus, mem, chips):
+                    out.append(l)
+                    if len(out) >= need:
+                        return out, checks
+                continue
+            if not self._admits(node, cpus, mem, chips):
+                continue
+            mid = (l + r) >> 1
+            stack.append((2 * node + 1, mid, r))
+            stack.append((2 * node, l, mid))
+        return out, checks
+
 
 class _Entry:
     __slots__ = ("name", "st", "caps", "slot", "ring_pos", "keys")
@@ -368,6 +400,60 @@ class NodeCapacityIndex:
         slot, checks = self._tree.first_fit(0, n, cpus, mem, chips, skip)
         self.node_fit_ops += checks
         return self._entries[slot].name if slot is not None else None
+
+    # -- gang queries (nodes=k all-or-nothing co-placement) -------------
+    def exists_gang_fit(self, k: int, cpus: float, mem: int,
+                        chips: int) -> bool:
+        """Do at least ``k`` distinct up-nodes EACH fit the per-node
+        demand? The gang feasibility watermark — one pruned tree walk
+        with early exit at the k-th admitting leaf, not k probes."""
+        if k <= 1:
+            return self.exists_fit(cpus, mem, chips)
+        self._ensure()
+        n = len(self._entries)
+        if n < k:
+            return False
+        slots, checks = self._tree.collect_fits(0, n, cpus, mem, chips, k)
+        self.node_fit_ops += checks
+        return len(slots) >= k
+
+    def gang_slots(self, k: int, cpus: float, mem: int, chips: int,
+                   key_fn: Optional[Callable[[NodeCaps], tuple]] = None,
+                   ) -> List[str]:
+        """The ``k`` member nodes for a gang launch, or ``[]`` if fewer
+        than k distinct nodes fit (all-or-nothing — never a partial
+        list).
+
+        Default order is registration order (the first k nodes the
+        insertion-ordered linear scan admits — the ``legacy_scan``
+        oracle in the engine reproduces exactly this). With ``key_fn``
+        the k admitted nodes are taken in (key, registration slot)
+        order instead — the gang_spread strategy passes the spread key
+        so a gang lands on the emptiest nodes first.
+        """
+        self._ensure()
+        n = len(self._entries)
+        if n < k or k <= 0:
+            return []
+        if key_fn is None:
+            slots, checks = self._tree.collect_fits(0, n, cpus, mem,
+                                                    chips, k)
+            self.node_fit_ops += checks
+            if len(slots) < k:
+                return []
+            return [self._entries[s].name for s in slots]
+        # key order: score every fitting node, take the best k. A gang
+        # pick perturbs k nodes at once, so the per-launch reposition
+        # amortisation of _Order does not apply — scored directly.
+        scored: List[Tuple[tuple, int]] = []
+        for e in self._entries:
+            self.node_fit_ops += 1
+            if _fits(e.st, cpus, mem, chips):
+                scored.append((key_fn(e.caps), e.slot))
+        if len(scored) < k:
+            return []
+        scored.sort()
+        return [self._entries[slot].name for _, slot in scored[:k]]
 
     def ring(self) -> Tuple[Tuple[str, ...], int]:
         """(name-sorted up-node names, membership version) for RR rings."""

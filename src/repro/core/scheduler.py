@@ -49,9 +49,21 @@ set of its instant*: when same-instant completions race for the last
 slots, it orders them with full information where the sync cadence
 served them event-by-event.
 
-In the TPU adaptation a "node" is a *slice* (e.g. one pod = 256 chips), so a
-gang-scheduled step-program always fits a single NodeView; cross-slice gangs
-are expressed as multiple cooperating tasks.
+In the TPU adaptation a "node" is a *slice* (e.g. one pod = 256 chips). A
+step-program that fits one slice is a plain task; a cross-slice program
+demands ``Resources.nodes = k`` and is placed as a **gang**: all-or-nothing
+co-placement on k distinct nodes, one launch id, one allocation record
+spanning k node states (``_Allocation.members``), released and requeued as
+a unit — partial placement can never leak, because member bookkeeping is
+only written after the k-node fit query succeeded. Arbiter dominant-share
+accounting, quotas, report leases and quarantine all count a gang as ONE
+task over k nodes' resources. Preemption is checkpoint-aware: a preempted
+gang carries ``Task.committed_s`` forward from its checkpoint cadence
+(``params["ckpt"]["interval_s"]``), requeues with remaining-work debt, and
+may resize to fewer nodes under pressure through the elastic width ladder
+(``params["elastic"]["allowed"]`` — validated SWMS-side against
+``ElasticPlan.new_mesh_shape``). ``nodes == 1`` (the default) never enters
+any gang path, so the single-node engine is bit-identical to before.
 """
 from __future__ import annotations
 
@@ -218,6 +230,21 @@ class _Allocation:
     mem: int
     chips: int
     workflow_id: str = ""
+    # gang launches: ALL member nodes (head first); cpus/mem/chips above
+    # stay PER NODE — every member holds exactly that much. Empty for
+    # plain single-node launches, so pre-gang snapshots unpickle as-is.
+    members: Tuple[str, ...] = ()
+
+
+def _alloc_cost(alloc: _Allocation, totals: Dict[str, float]) -> float:
+    """Dominant-share cost of one allocation: a gang is ONE task holding
+    k nodes' worth of resources. Gated on membership so every
+    single-node allocation takes the exact pre-gang float path."""
+    k = len(alloc.members)
+    if k > 1:
+        return dominant_cost(alloc.cpus * k, alloc.mem * k,
+                             alloc.chips * k, totals)
+    return dominant_cost(alloc.cpus, alloc.mem, alloc.chips, totals)
 
 
 @dataclass
@@ -534,6 +561,10 @@ class CommonWorkflowScheduler:
         self.request_dedup_window = request_dedup_window
         self._seen_requests: Dict[str, Optional[str]] = {}
         self.duplicate_requests = 0
+        # --- gang placement (Resources.nodes > 1) ---
+        self.gang_launches = 0         # gangs placed (any width)
+        self.gang_resizes = 0          # gangs launched below requested width
+        self.gang_preemptions = 0      # gang launches killed by the arbiter
 
     # ------------------------------------------------------------------
     # the command seam
@@ -634,7 +665,11 @@ class CommonWorkflowScheduler:
         self._suspicion.pop(name, None)
         self._invalidate_totals()
         self.provenance.record_node_event(NodeEvent(name, now, "DOWN"))
-        victims = [tid for tid, a in self.allocations.items() if a.node == name]
+        # a gang dies with ANY of its members: the launch is all-or-
+        # nothing, so losing one node requeues the whole gang (surviving
+        # members' capacity comes back through the same _release)
+        victims = [tid for tid, a in self.allocations.items()
+                   if a.node == name or name in a.members]
         for tid in victims:
             self._release(tid)
             copy = self.spec_copies.pop(tid, None)
@@ -1013,8 +1048,7 @@ class CommonWorkflowScheduler:
             usage: Dict[str, float] = {}
             for alloc in self.allocations.values():
                 self.usage_scan_ops += 1
-                cost = dominant_cost(alloc.cpus, alloc.mem, alloc.chips,
-                                     totals)
+                cost = _alloc_cost(alloc, totals)
                 usage[alloc.workflow_id] = (
                     usage.get(alloc.workflow_id, 0.0) + cost)
             return usage
@@ -1026,7 +1060,7 @@ class CommonWorkflowScheduler:
                 self.usage_scan_ops += 1
                 self._usage_costs.setdefault(alloc.workflow_id, {})[
                     task_id
-                ] = dominant_cost(alloc.cpus, alloc.mem, alloc.chips, totals)
+                ] = _alloc_cost(alloc, totals)
             self._usage_cache.clear()
             self._usage_dirty = dict.fromkeys(self._usage_costs)
             self._charges_stale = False
@@ -1498,6 +1532,28 @@ class CommonWorkflowScheduler:
                         continue
             mem_alloc = self._memory_for(task, mem_cap)
             res = task.spec.resources
+            if res.nodes > 1:
+                # gang placement: all-or-nothing on k distinct nodes
+                # (possibly a narrower width from the elastic ladder).
+                # Entirely separate branch — nodes == 1 never reaches it.
+                members = self._place_gang(task, mem_alloc)
+                if members is None:
+                    continue
+                self._launch_gang(task, members, mem_alloc, now)
+                if quotas and task.spec.workflow_id in quota_running:
+                    quota_running[task.spec.workflow_id] += 1
+                if self.legacy_scan:
+                    views = None
+                else:
+                    if views is not None:
+                        for member in members:
+                            views[view_slot[member]] = (
+                                self.nodes[member].view())
+                            self.view_patches += 1
+                            self.view_materializations += 1
+                    feasible = set()
+                launched += 1
+                continue
             if not self.legacy_scan:
                 key = (res.chips, res.cpus, mem_alloc)
                 if key in self._infeasible:
@@ -1682,15 +1738,184 @@ class CommonWorkflowScheduler:
         if alloc is None:
             return
         self._discharge_usage(task_id, alloc.workflow_id)
-        st = self.nodes.get(alloc.node)
-        if st is not None:
-            st.cpus_free = min(st.cpus_free + alloc.cpus, st.info.cpus)
-            st.mem_free = min(st.mem_free + alloc.mem, st.info.mem_bytes)
-            st.chips_free = min(st.chips_free + alloc.chips, st.info.chips)
-            if self._node_index is not None:
-                self._node_index.touch(alloc.node)   # no-op if node is down
+        # a gang restores every member's per-node share; members no
+        # longer in the cluster (the node-loss that killed the gang)
+        # are skipped — their capacity left with them
+        for member in (alloc.members or (alloc.node,)):
+            st = self.nodes.get(member)
+            if st is not None:
+                st.cpus_free = min(st.cpus_free + alloc.cpus, st.info.cpus)
+                st.mem_free = min(st.mem_free + alloc.mem,
+                                  st.info.mem_bytes)
+                st.chips_free = min(st.chips_free + alloc.chips,
+                                    st.info.chips)
+                if self._node_index is not None:
+                    self._node_index.touch(member)  # no-op if node is down
         # capacity grew: previously-infeasible demand buckets may now fit
         self._capacity_version += 1
+
+    # ------------------------------------------------------------------
+    # gang placement (Resources.nodes > 1)
+    # ------------------------------------------------------------------
+    def _gang_sizes(self, task: Task) -> List[int]:
+        """Acceptable gang widths, widest first.
+
+        The full request leads; narrower widths come from the elastic
+        ladder (``params["elastic"]["allowed"]``, validated SWMS-side
+        against ``ElasticPlan.new_mesh_shape`` divisibility) so a gang
+        squeezed out at full width may still run — elastic restore
+        proves a (1, n)-saved checkpoint restores under (1, m)."""
+        res = task.spec.resources
+        sizes = [res.nodes]
+        elastic = task.spec.params.get("elastic")
+        if isinstance(elastic, dict):
+            for width in elastic.get("allowed", ()):
+                if (isinstance(width, int) and not isinstance(width, bool)
+                        and 1 <= width < res.nodes and width not in sizes):
+                    sizes.append(width)
+        sizes.sort(reverse=True)
+        return sizes
+
+    def _place_gang(self, task: Task, mem_alloc: int) -> Optional[List[str]]:
+        """Pick k distinct member nodes for a gang, or None.
+
+        Widths are tried widest-first down the elastic ladder. Each
+        width has its own infeasible bucket (keyed with the width, so
+        gang buckets never collide with single-node ones) and its own
+        k-node feasibility watermark. The indexed path resolves members
+        through ``NodeCapacityIndex.gang_slots``; ``legacy_scan`` keeps
+        the registration-order oracle walk over the node states, which
+        the gang bit-identity bench pins against the tree."""
+        res = task.spec.resources
+        idx = self._node_index
+        strat = self._strategy_for(task)
+        key_fn = getattr(strat, "gang_key_fn", None)
+        for width in self._gang_sizes(task):
+            if idx is not None:
+                key = (res.chips, res.cpus, mem_alloc, width)
+                if key in self._infeasible:
+                    continue
+                self.feasibility_checks += 1
+                if not idx.exists_gang_fit(width, res.cpus, mem_alloc,
+                                           res.chips):
+                    self._infeasible[key] = None
+                    continue
+                self.placement_probes += 1
+                members = idx.gang_slots(width, res.cpus, mem_alloc,
+                                         res.chips, key_fn=key_fn)
+            else:
+                self.placement_probes += 1
+                fitting: List[Tuple[Any, int, str]] = []
+                for slot, st in enumerate(self.nodes.values()):
+                    if not st.up or st.info.name in self._quarantined:
+                        continue
+                    self.node_fit_ops += 1
+                    if _fits_demand(st.cpus_free, st.mem_free,
+                                    st.chips_free, res.cpus, mem_alloc,
+                                    res.chips):
+                        fitting.append(
+                            (key_fn(st.view()) if key_fn is not None
+                             else (), slot, st.info.name))
+                        if key_fn is None and len(fitting) >= width:
+                            break
+                if len(fitting) < width:
+                    members = []
+                else:
+                    fitting.sort()
+                    members = [name for _, _, name in fitting[:width]]
+            if len(members) == width:
+                return members
+        return None
+
+    def _launch_gang(self, task: Task, members: List[str], mem_alloc: int,
+                     now: float) -> None:
+        """Atomically launch one gang across ``members``.
+
+        The mirror of ``_launch`` with k node states decremented under
+        ONE launch id and ONE allocation record — all member bookkeeping
+        is written in a single pass after placement fully succeeded, so
+        no failure mode can leave a partial gang behind. The adapter
+        receives one launch (head node) and reads ``task.gang_nodes``
+        to fan out."""
+        res = task.spec.resources
+        cpus = res.cpus if res.chips == 0 else 0.0
+        width = len(members)
+        for member in members:
+            st = self.nodes[member]
+            st.cpus_free -= cpus
+            st.mem_free -= mem_alloc
+            st.chips_free -= res.chips
+            if self._node_index is not None:
+                self._node_index.touch(member)
+        head = members[0]
+        self.allocations[task.task_id] = _Allocation(
+            head, cpus, mem_alloc, res.chips, task.spec.workflow_id,
+            members=tuple(members))
+        # ONE task, k nodes' resources: the gang's dominant-share charge
+        self._charge_usage(task.task_id, task.spec.workflow_id,
+                           cpus * width, mem_alloc * width,
+                           res.chips * width)
+        self.mem_allocated[task.task_id] = mem_alloc
+        self._ready_discard(task.task_id, task.spec.workflow_id)
+        if self._preempt_debt:
+            self._clear_preempt_debt(task.spec.workflow_id, task.task_id)
+        task.launch_id = next(self._launch_seq)
+        task.state = TaskState.SCHEDULED
+        task.node = head
+        task.gang_nodes = tuple(members)
+        task.schedule_time = now
+        task.avoid_node = None
+        self.gang_launches += 1
+        if width < res.nodes:
+            self.gang_resizes += 1
+        if self.report_lease is not None:
+            # one lease covers the whole gang (one launch, one report
+            # stream); size report_lease for the slowest-width runtime
+            self._leases.pop(task.task_id, None)
+            self._leases[task.task_id] = (task.launch_id,
+                                          now + self.report_lease)
+        if self.predictor is not None and self.predictor.known(task.name):
+            rt, _ = self.predictor.predict(task.name, task.spec.input_size,
+                                           head)
+            for member in members:
+                st = self.nodes[member]
+                st.est_available_at = max(st.est_available_at, now) + rt
+        self.adapter.launch(task, head, mem_alloc)
+
+    def _committed_progress(self, task: Task, now: float) -> float:
+        """Checkpoint-committed seconds of base runtime at kill time.
+
+        Progress accrues at ``speed × width/requested`` base-seconds per
+        wall-second (the slowest member paces a gang; a resized gang
+        spreads the same work over fewer nodes) on top of what earlier
+        launches already committed; only whole checkpoint intervals are
+        committed — work past the last manifest is lost. Returns 0.0
+        for tasks without a checkpoint cadence."""
+        ckpt = task.spec.params.get("ckpt")
+        if not isinstance(ckpt, dict):
+            return 0.0
+        interval = ckpt.get("interval_s")
+        if (isinstance(interval, bool)
+                or not isinstance(interval, (int, float)) or interval <= 0):
+            return 0.0
+        done = task.committed_s
+        if task.state == TaskState.RUNNING:
+            speed = 1.0
+            gang = task.gang_nodes or ((task.node,) if task.node else ())
+            speeds = [self.nodes[n].info.speed_factor
+                      for n in gang if n in self.nodes]
+            if speeds:
+                speed = min(speeds)
+            width = len(task.gang_nodes) or 1
+            rate = speed * width / max(task.spec.resources.nodes, 1)
+            done += max(now - task.start_time, 0.0) * rate
+        committed = math.floor(done / interval) * interval
+        base = task.spec.base_runtime_s
+        if base > 0.0:
+            # the last manifest that can exist is the last whole interval
+            # inside the base runtime — never the base itself
+            committed = min(committed, math.floor(base / interval) * interval)
+        return committed
 
     # ------------------------------------------------------------------
     # preemptive arbitration
@@ -1716,8 +1941,10 @@ class CommonWorkflowScheduler:
             candidates.append(PreemptionCandidate(
                 task=task,
                 workflow_id=alloc.workflow_id,
-                cost=dominant_cost(alloc.cpus, alloc.mem, alloc.chips,
-                                   totals),
+                # a gang's cost is its k-node charge (what killing it
+                # frees); _alloc_cost gates so single-node candidates
+                # keep the exact pre-gang float
+                cost=_alloc_cost(alloc, totals),
                 progress=(now - task.start_time
                           if task.state == TaskState.RUNNING else 0.0),
             ))
@@ -1734,7 +1961,23 @@ class CommonWorkflowScheduler:
         for task in ready:
             res = task.spec.resources
             mem_alloc = self._memory_for(task)
-            if idx is not None:
+            if res.nodes > 1:
+                # a gang is unplaceable unless its NARROWEST acceptable
+                # width fits — if even that fails, freeing capacity for
+                # it is what preemption is for
+                narrowest = min(self._gang_sizes(task))
+                if idx is not None:
+                    fits = idx.exists_gang_fit(narrowest, res.cpus,
+                                               mem_alloc, res.chips)
+                else:
+                    fits = sum(
+                        1 for st in self.nodes.values()
+                        if st.up and st.info.name not in self._quarantined
+                        and _fits_demand(st.cpus_free, st.mem_free,
+                                         st.chips_free, res.cpus,
+                                         mem_alloc, res.chips)
+                    ) >= narrowest
+            elif idx is not None:
                 fits = idx.exists_fit(res.cpus, mem_alloc, res.chips)
             else:
                 fits = any(
@@ -1769,14 +2012,33 @@ class CommonWorkflowScheduler:
         dead launch — id-carrying and lenient adapters alike (a requeued
         READY task has no live launch to report on)."""
         tid, wid = task.task_id, task.spec.workflow_id
+        # checkpoint credit BEFORE the kill clock stops: work up to the
+        # last manifest is committed — the requeued task only repeats
+        # the tail past it, so its debt (what the preemption really
+        # cost) shrinks by the committed fraction, and rank strategies
+        # see the smaller remaining runtime (dag.touch invalidates
+        # their memos). Tasks without a checkpoint cadence keep the
+        # full-cost path bit-identically.
+        committed = self._committed_progress(task, now)
+        if committed > task.committed_s:
+            task.committed_s = committed
+            dag = self.dags.get(wid)
+            if dag is not None:
+                dag.touch()
+        base = task.spec.base_runtime_s
+        if task.committed_s > 0.0 and base > 0.0:
+            cost *= max(base - task.committed_s, 0.0) / base
         self._release(tid)
         self.adapter.kill(tid)
         task.end_time = now
         self._record(task, "PREEMPTED",
                      TaskResult(False, reason="preempted by arbiter"))
         self._preempt_debt.setdefault(wid, {})[tid] = cost
+        if task.gang_nodes:
+            self.gang_preemptions += 1
         task.state = TaskState.READY
         task.node = None
+        task.gang_nodes = ()
         # burn a fresh launch id NOW (as the failure/node-loss requeues
         # do): the dead launch's reports are rejected in the requeue →
         # relaunch window too
@@ -2052,12 +2314,25 @@ class CommonWorkflowScheduler:
                         requeue_free: bool = False) -> None:
         self._record(task, "FAILED", result)
         failed_on = task.node
-        if not requeue_free:
+        if requeue_free:
+            # engine-initiated requeue (node loss, lease expiry): the
+            # checkpoint manifest lives off-node, so progress committed
+            # up to the last manifest survives into the relaunch
+            committed = self._committed_progress(task, now)
+            if committed > task.committed_s:
+                task.committed_s = committed
+                dag = self.dags.get(task.spec.workflow_id)
+                if dag is not None:
+                    dag.touch()
+        else:
             # a real failure on a live node counts against it (requeue-
             # free paths are the engine's doing — node loss bumps
             # nothing, lease expiry scores its node itself)
             self._suspect_node(failed_on, now)
             task.attempt += 1
+            # a crashing task may have corrupted its checkpoint stream:
+            # the retry restarts from zero (preemption never does this)
+            task.committed_s = 0.0
         if task.attempt > task.spec.max_retries:
             task.state = TaskState.ERROR
             self.tasks_settled += 1
@@ -2092,6 +2367,7 @@ class CommonWorkflowScheduler:
             task.avoid_node = failed_on
         task.state = TaskState.READY
         task.node = None
+        task.gang_nodes = ()
         task.failure_reason = result.reason
         # the old launch is dead the moment the task is requeued: burn a
         # fresh launch id NOW so the dead launch's late reports are
@@ -2114,6 +2390,10 @@ class CommonWorkflowScheduler:
                 continue
             task = self._find_task(tid)
             if task is None or task.state != TaskState.RUNNING:
+                continue
+            if task.spec.resources.nodes > 1:
+                # a backup copy of a gang would hold k more nodes for a
+                # race the checkpoint stream already mitigates
                 continue
             if not self.predictor.known(task.name):
                 continue
@@ -2238,6 +2518,9 @@ class CommonWorkflowScheduler:
             "anti_affinity_redirects": self.anti_affinity_redirects,
             "duplicate_requests": self.duplicate_requests,
             "dedup_window_size": len(self._seen_requests),
+            "gang_launches": self.gang_launches,
+            "gang_resizes": self.gang_resizes,
+            "gang_preemptions": self.gang_preemptions,
         }
 
     def op_counts(self) -> Dict[str, int]:
@@ -2276,4 +2559,7 @@ class CommonWorkflowScheduler:
             "quarantine_releases": self.quarantine_releases,
             "anti_affinity_redirects": self.anti_affinity_redirects,
             "duplicate_requests": self.duplicate_requests,
+            "gang_launches": self.gang_launches,
+            "gang_resizes": self.gang_resizes,
+            "gang_preemptions": self.gang_preemptions,
         }

@@ -433,6 +433,14 @@ class HEFTStrategy(Strategy):
             )
             for tid in dag.tasks
         }
+        # checkpoint credit: a preempted task resumes from its last
+        # committed checkpoint, so only the *remaining* work should pull
+        # its upward rank (committed_s bumps dag.version via touch(), so
+        # the memo key already covers this)
+        for tid, t in dag.tasks.items():
+            base = t.spec.base_runtime_s
+            if t.committed_s > 0.0 and base > 0.0:
+                weights[tid] *= max(base - t.committed_s, 0.0) / base
         ranks = dag.ranks(weights)
         if self._memo_enabled:
             self._memo[dag.workflow_id] = (key, ranks)
@@ -693,6 +701,46 @@ class DataLocalityStrategy(Strategy):
         return min(fit, key=_spread_place_key).name   # shared spread key
 
 
+class GangSpreadStrategy(Strategy):
+    """FIFO order; spread placement — with a gang member key.
+
+    For ``nodes == 1`` tasks this is OriginalStrategy (same priority key,
+    same indexed spread placement), so a gang-free workload runs
+    bit-identical under either name. For ``nodes > 1`` tasks the engine
+    consults ``gang_key_fn`` to pick *which* k fitting nodes host the
+    gang: the spread key ranks all fitting nodes and the k least-loaded
+    win, keeping gang members off the hottest nodes so a single busy
+    node does not straggle the whole gang."""
+
+    name = "gang_spread"
+
+    _PLACE_KEY = PlacementKey(order="spread", key_fn=_spread_place_key)
+
+    # member-selection key for k-node gangs: pure function of a node's
+    # capacity fields (same contract as PlacementKey.key_fn — the engine
+    # scores every fitting node and takes the k smallest)
+    gang_key_fn = staticmethod(_spread_place_key)
+
+    def prioritize(self, tasks: List[Task], ctx: SchedulingContext) -> List[Task]:
+        return self._prioritize_by_key(tasks, ctx)
+
+    def priority_token(self, ctx, dag):
+        return ()
+
+    def priority_key(self, task: Task, ctx: SchedulingContext) -> tuple:
+        return (task.ready_time, task.submit_time, task.task_id)
+
+    def place_key(self, task, ctx):
+        return self._PLACE_KEY
+
+    def place(self, task: Task, nodes: List[NodeView],
+              ctx: SchedulingContext) -> Optional[str]:
+        fit = _fitting(task, nodes)
+        if not fit:
+            return None
+        return min(fit, key=_spread_place_key).name
+
+
 STRATEGIES = {
     "original": OriginalStrategy,
     "fifo_rr": FIFORoundRobin,
@@ -704,6 +752,7 @@ STRATEGIES = {
     "bestfit": BestFitStrategy,
     "worstfit": WorstFitStrategy,
     "data_local": DataLocalityStrategy,
+    "gang_spread": GangSpreadStrategy,
 }
 
 

@@ -30,8 +30,42 @@ class TrainJobSpec:
     chunk: int = 10                  # steps per workflow task
     eval_every: int = 0              # 0 = no eval tasks
     ckpt_every: int = 0
-    chips: int = 0                   # gang size on a TPU fleet (0 = CPU task)
+    chips: int = 0                   # chips PER NODE (0 = CPU task)
+    nodes: int = 1                   # gang width: distinct nodes co-placed
+    ckpt_interval_s: float = 0.0     # checkpoint cadence in task-seconds
+                                     # (0 = no preemption-survivable progress)
+    elastic: tuple = ()              # allowed narrower gang widths (ints < nodes)
+    model_parallel: int = 1          # mesh model axis, pins resize feasibility
     roofline: Optional[RooflineTerms] = None
+
+
+def _validated_elastic(spec: TrainJobSpec) -> List[int]:
+    """Check every allowed width is a feasible remesh target.
+
+    Validation happens HERE — the one layer that may touch jax — via
+    ``ElasticPlan.new_mesh_shape``: a width whose device count does not
+    divide by the model axis would assert at resize time inside the job,
+    so reject it at workflow-build time instead. The core engine only
+    ever sees the vetted integer list in ``params["elastic"]``.
+    """
+    from .fault import ElasticPlan   # lazy: keeps jax off the import path
+
+    chips = max(spec.chips, 1)
+    widths: List[int] = []
+    for w in spec.elastic:
+        if not isinstance(w, int) or isinstance(w, bool) or not 1 <= w < spec.nodes:
+            raise ValueError(
+                f"elastic width {w!r} invalid for a {spec.nodes}-node gang "
+                f"(need an int in [1, {spec.nodes - 1}])")
+        plan = ElasticPlan(spec.nodes * chips, w * chips)
+        try:
+            plan.new_mesh_shape(spec.model_parallel)
+        except AssertionError:
+            raise ValueError(
+                f"elastic width {w} gives {w * chips} devices, not divisible "
+                f"by model_parallel={spec.model_parallel}") from None
+        widths.append(w)
+    return sorted(set(widths), reverse=True)
 
 
 class SharedState:
@@ -51,8 +85,20 @@ def build_training_workflow(
 ) -> WorkflowDAG:
     """Compile a training job into a workflow DAG of real callables."""
     dag = WorkflowDAG(spec.job_id, f"train:{spec.job_id}")
+    if spec.nodes < 1:
+        raise ValueError(f"nodes must be >= 1, got {spec.nodes!r}")
+    # chips is a PER-NODE request; a multi-node job asks for `nodes`
+    # distinct hosts (the engine places the gang all-or-nothing) instead
+    # of the old collapse of the whole gang onto one node's chip count
     res = Resources(cpus=1.0, mem_bytes=1 << 30, chips=spec.chips,
-                    gang=spec.chips > 0)
+                    gang=spec.chips > 0 or spec.nodes > 1, nodes=spec.nodes)
+    extra: Dict[str, Any] = {}
+    if spec.ckpt_interval_s > 0:
+        extra["ckpt"] = {"interval_s": float(spec.ckpt_interval_s)}
+    if spec.elastic:
+        if spec.nodes <= 1:
+            raise ValueError("elastic widths require a multi-node gang")
+        extra["elastic"] = {"allowed": _validated_elastic(spec)}
     prev: Optional[str] = None
     n_chunks = (spec.n_steps + spec.chunk - 1) // spec.chunk
     for c in range(n_chunks):
@@ -70,7 +116,7 @@ def build_training_workflow(
                      inputs=(DataRef(f"state@{start}", 0),),
                      outputs=(DataRef(f"state@{stop}", 0),),
                      resources=res, fn=fn,
-                     params={"kwargs": {}}),
+                     params={"kwargs": {}, **extra}),
             deps=(prev,) if prev else (),
         )
         if spec.eval_every and stop % spec.eval_every == 0 and run_eval:

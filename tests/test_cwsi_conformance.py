@@ -258,6 +258,36 @@ BAD_BODIES = [
     ("GET", "/v1/predict/runtime", {}, 400),                  # name missing
     ("GET", "/v1/predict/runtime",
      {"name": "proc", "inputSize": {"x": 1}}, 400),
+    # strict resource-count typing: chips/nodes/hbmBytesPerChip must be
+    # real integers (bool is a subtype of int in Python — rejected) in
+    # range; a malformed gang request 400s before any task is registered
+    ("POST", "/v1/workflow/w0/task",
+     {"task": {"id": "w0.t9", "name": "p",
+               "resources": {"chips": True}}}, 400),
+    ("POST", "/v1/workflow/w0/task",
+     {"task": {"id": "w0.t9", "name": "p",
+               "resources": {"chips": -1}}}, 400),
+    ("POST", "/v1/workflow/w0/task",
+     {"task": {"id": "w0.t9", "name": "p",
+               "resources": {"chips": 2.0}}}, 400),
+    ("POST", "/v1/workflow/w0/task",
+     {"task": {"id": "w0.t9", "name": "p",
+               "resources": {"nodes": 2.5}}}, 400),
+    ("POST", "/v1/workflow/w0/task",
+     {"task": {"id": "w0.t9", "name": "p",
+               "resources": {"nodes": 0}}}, 400),
+    ("POST", "/v1/workflow/w0/task",
+     {"task": {"id": "w0.t9", "name": "p",
+               "resources": {"nodes": "2"}}}, 400),
+    ("POST", "/v1/workflow/w0/task",
+     {"task": {"id": "w0.t9", "name": "p",
+               "resources": {"nodes": True}}}, 400),
+    ("POST", "/v1/workflow/w0/task",
+     {"task": {"id": "w0.t9", "name": "p",
+               "resources": {"hbmBytesPerChip": True}}}, 400),
+    ("POST", "/v1/workflow/w0/task",
+     {"task": {"id": "w0.t9", "name": "p",
+               "resources": {"hbmBytesPerChip": -8}}}, 400),
     ("GET", "/v1/workflow/missing/state", None, 404),
     ("GET", "/v1/workflow/w0/task/missing/state", None, 404),
     ("GET", "/v1/provenance/workflow/missing", None, 200),    # empty, valid

@@ -146,6 +146,55 @@ def test_preemption_actually_changes_the_flip_schedule():
     assert flipped[2] != flipped[0]
 
 
+def _train_gang_dag(wid, n_chunks=3, nodes=2, runtime=40.0):
+    """A training-shaped chain of k-node gang tasks with a checkpoint
+    cadence and an elastic fallback width — the long-running tenant of
+    the gang scenarios."""
+    from repro.core import Resources, TaskSpec, WorkflowDAG
+
+    dag = WorkflowDAG(wid, f"train:{wid}")
+    prev = None
+    for c in range(n_chunks):
+        tid = f"{wid}.chunk.{c:02d}"
+        dag.add_task(
+            TaskSpec(task_id=tid, name="train_chunk",
+                     resources=Resources(cpus=2.0, mem_bytes=1 << 30,
+                                         nodes=nodes),
+                     base_runtime_s=runtime,
+                     params={"ckpt": {"interval_s": 10.0},
+                             "elastic": {"allowed": [1]}}),
+            deps=(prev,) if prev else ())
+        prev = tid
+    return dag
+
+
+def test_gang_preemptive_fair_share_trace_is_golden():
+    """A 2-node training gang racing nf-core bursts under preemptive
+    fair share: the snapshot pins gang co-placement, the mid-run share
+    flip preempting the gang, and its checkpoint-credited relaunch."""
+    sim = ClusterSimulator(heterogeneous_cluster(4), SimConfig(seed=42))
+    cws = CommonWorkflowScheduler(adapter=sim, strategy="gang_spread",
+                                  predictor=LotaruPredictor(),
+                                  arbiter="fair_share",
+                                  max_preemptions_per_round=2)
+    cws.set_workflow_share("train", 4.0)
+    cws.set_workflow_share("tenant-b", 1.0)
+    sim.attach(cws)
+    dags = [_train_gang_dag("train", n_chunks=3, nodes=2, runtime=40.0),
+            build_workflow("chipseq", seed=5, workflow_id="tenant-b",
+                           n_samples=3)]
+    sim.submit_workflow_at(0.0, dags[0])
+    sim.submit_workflow_at(5.0, dags[1])
+    sim.call_at(30.0, lambda now: (cws.set_workflow_share("train", 0.2),
+                                   cws.set_workflow_share("tenant-b", 8.0)))
+    sim.run()
+    assert all(d.succeeded() for d in dags)
+    assert cws.gang_launches > 0
+    trace = _trace(cws, dags)
+    assert trace, "empty trace"
+    _check("gang_fair_share_preemptive", trace)
+
+
 def test_arbiters_actually_differ():
     """Sanity for the suite itself: fair-share and strict-priority golden
     scenarios must not collapse into the first-appearance schedule (if
